@@ -1,0 +1,31 @@
+"""Append the final roofline tables to EXPERIMENTS.md (run after the
+dry-run sweeps finish)."""
+import io
+import sys
+from contextlib import redirect_stdout
+
+sys.argv = ["roofline", "results_single.jsonl", "--markdown"]
+import benchmarks.roofline as rl  # noqa: E402
+
+out = io.StringIO()
+with redirect_stdout(out):
+    rl.main()
+single = out.getvalue()
+
+sys.argv = ["roofline", "results_multi.jsonl", "--markdown"]
+out = io.StringIO()
+with redirect_stdout(out):
+    rl.main()
+multi = out.getvalue()
+
+with open("EXPERIMENTS.md") as f:
+    txt = f.read()
+marker = "(The final sweep's table is appended below by `make_tables.py`"
+head = txt.split(marker)[0]
+with open("EXPERIMENTS.md", "w") as f:
+    f.write(head)
+    f.write("### Single-pod (16x16 = 256 chips), optimized\n\n")
+    f.write(single)
+    f.write("\n### Multi-pod (2x16x16 = 512 chips), optimized\n\n")
+    f.write(multi)
+print("tables appended")

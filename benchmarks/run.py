@@ -1,0 +1,204 @@
+"""Benchmark harness -- one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV:
+
+  fig7/*      the six benchmarks (Table 5) in base / tiled /
+              tiled+metapipeline configurations.  us_per_call = CPU
+              wall-time of the jnp-lowered program; derived = modeled
+              speedup from the analytic cost model (HBM traffic +
+              metapipeline overlap -- the quantity Fig. 7 measures on
+              the FPGA; see EXPERIMENTS.md §Perf for the comparison).
+  fig5c/*     k-means traffic table entries (reads reduction factors).
+  table2/*    strip-mining rule structural checks (PASS/FAIL).
+  table3/*    gemm interchange + generated-Pallas-kernel equivalence.
+  kernels/*   Pallas kernel interpret-mode sanity timings vs oracle.
+  roofline/*  per-(arch x shape) dominant-term summary from the latest
+              dry-run results, if present.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ir
+from repro.core.codegen_jax import execute
+from repro.core.cost import traffic
+from repro.core.scheduling import build_schedule, model_speedup
+from repro.core.strip_mine import insert_tile_copies, strip_mine, tile
+from repro.patterns.analytics import SUITE
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived) -> None:
+    ROWS.append(f"{name},{us:.1f},{derived}")
+    print(ROWS[-1], flush=True)
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _modeled_seconds(prog, metapipelined: bool) -> float:
+    """HBM-stream time of the program's main-memory reads; with
+    metapipelining, overlapped per the schedule (max of stages)."""
+    tr = traffic(prog)
+    stream_s = tr.total_reads * 4 / 819e9
+    if not metapipelined:
+        return stream_s
+    mp = build_schedule(prog)
+    if mp is None:
+        return stream_s
+    body_words = sum(s.words for s in mp.stages if s.kind == "body")
+    _, _, overlap = model_speedup(mp, flops_per_body=body_words * 100.0)
+    return stream_s / max(overlap, 1.0)
+
+
+def fig7():
+    for name, builder in SUITE.items():
+        p, sizes, make_inputs, reference = builder()
+        inputs = {k: jnp.asarray(v) for k, v in make_inputs().items()}
+        ref = np.asarray(reference(inputs))
+
+        tiled_ir = insert_tile_copies(strip_mine(p, sizes))
+        full_ir = tile(p, sizes)
+        base_s = _modeled_seconds(p, metapipelined=False)
+        variants = (("base", p, base_s),
+                    ("tiled", tiled_ir,
+                     _modeled_seconds(tiled_ir, metapipelined=False)),
+                    ("tiled_meta", full_ir,
+                     _modeled_seconds(full_ir, metapipelined=True)))
+        for label, prog, model_s in variants:
+            f = jax.jit(lambda **kw: execute(prog, kw))
+            out = f(**inputs)
+            if isinstance(out, tuple):
+                out = out[0]
+            np.testing.assert_allclose(np.asarray(out), ref,
+                                       rtol=2e-3, atol=2e-3)
+            us = _time(lambda: f(**inputs))
+            emit(f"fig7/{name}/{label}", us,
+                 f"model_speedup={base_s / max(model_s, 1e-12):.1f}x")
+
+
+def fig5c():
+    from repro.patterns.analytics import kmeans
+    n, k, d, b0, b1 = 256, 8, 16, 32, 4
+    p, sizes, _, _ = kmeans(n, k, d, b0, b1)
+    fused = traffic(p)
+    sm = traffic(insert_tile_copies(strip_mine(p, sizes)))
+    ic = traffic(tile(p, sizes))
+    emit("fig5c/fused/centroids_reads", 0, fused.reads["centroids"])
+    emit("fig5c/stripmined/centroids_reads", 0, sm.reads["centroids"])
+    emit("fig5c/interchanged/centroids_reads", 0, ic.reads["centroids"])
+    ok = ic.reads["centroids"] == (n // b0) * k * d
+    factor = fused.reads["centroids"] / ic.reads["centroids"]
+    emit("fig5c/interchange_reduction_matches_paper", 0,
+         f"{'PASS' if ok else 'FAIL'}(factor={factor:.0f}=b0)")
+
+
+def table2():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                    "tests"))
+    from test_core_transforms import (mk_filter, mk_hist, mk_map_2x,
+                                      mk_sumrows)
+    checks = {
+        "map": (mk_map_2x(32), {"m": (8,)}, ir.MultiFold),
+        "multifold": (mk_sumrows(12, 16), {"sr": (4, 8)}, ir.MultiFold),
+        "flatmap": (mk_filter(40), {"f": (8,)}, ir.FlatMap),
+        "groupbyfold": (mk_hist(64, 8), {"h": (16,)}, ir.GroupByFold),
+    }
+    for name, (p, sizes, want) in checks.items():
+        t = strip_mine(p, sizes)
+        ok = isinstance(t, want) and t.strided and t.inner is not None
+        emit(f"table2/{name}", 0, "PASS" if ok else "FAIL")
+
+
+def table3():
+    from repro.core.codegen_pallas import lower, match_tiled_gemm
+    p, sizes, make_inputs, reference = SUITE["gemm"]()
+    t = tile(p, sizes)
+    inputs = make_inputs()
+    ok = match_tiled_gemm(t)
+    kern = lower(t)
+    out = kern(**inputs)
+    np.testing.assert_allclose(np.asarray(out), reference(inputs),
+                               rtol=2e-3, atol=2e-3)
+    us = _time(lambda: kern(**inputs), reps=1)
+    emit("table3/gemm_interchanged_kernel", us,
+         "PASS" if ok else "FAIL")
+
+
+def kernels():
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.matmul import matmul
+    from repro.kernels.ssd_scan import ssd_scan
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    y = jax.random.normal(jax.random.PRNGKey(1), (256, 256))
+    us = _time(lambda: matmul(x, y, block_m=128, block_n=128,
+                              block_k=128), reps=1)
+    err = float(jnp.max(jnp.abs(matmul(x, y) - ref.matmul(x, y))))
+    emit("kernels/matmul_256", us, f"max_err={err:.1e}")
+
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.PRNGKey(4), (1, 2, 256, 64))
+    us = _time(lambda: flash_attention(q, k, v, block_q=128,
+                                       block_k=128), reps=1)
+    err = float(jnp.max(jnp.abs(
+        flash_attention(q, k, v) - ref.attention(q, k, v))))
+    emit("kernels/flash_attention_gqa", us, f"max_err={err:.1e}")
+
+    xs = jax.random.normal(jax.random.PRNGKey(5), (1, 128, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(6),
+                                           (1, 128, 4))) * 0.1
+    A = -jnp.ones((4,)) * 0.5
+    B = jax.random.normal(jax.random.PRNGKey(7), (1, 128, 16))
+    C = jax.random.normal(jax.random.PRNGKey(8), (1, 128, 16))
+    us = _time(lambda: ssd_scan(xs, dt, A, B, C, chunk=32), reps=1)
+    err = float(jnp.max(jnp.abs(ssd_scan(xs, dt, A, B, C, chunk=32)
+                                - ref.ssd_scan(xs, dt, A, B, C))))
+    emit("kernels/ssd_scan_chunked", us, f"max_err={err:.1e}")
+
+
+def roofline():
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "results_single.jsonl")
+    if not os.path.exists(path):
+        emit("roofline/skipped", 0, "no results_single.jsonl")
+        return
+    from benchmarks.roofline import analyze_record
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if "skipped" in r or "error" in r:
+                continue
+            a = analyze_record(r)
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0,
+                 f"bottleneck={a['dominant']}"
+                 f";frac={a['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    fig7()
+    fig5c()
+    table2()
+    table3()
+    kernels()
+    roofline()
+    print(f"\n{len(ROWS)} benchmark rows emitted")
+
+
+if __name__ == "__main__":
+    main()

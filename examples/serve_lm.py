@@ -1,0 +1,11 @@
+"""Serving example: batched KV-cache decode on three architecture
+families (dense GQA, Mamba-2 SSD state, Zamba-2 hybrid).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import serve
+
+for arch in ("granite-3-2b", "mamba2-370m", "zamba2-2.7b"):
+    print(f"== {arch} (reduced config) ==")
+    toks = serve(arch, smoke=True, batch=2, prompt_len=16, gen=8)
+    print("   sample token ids:", toks[0, :8].reshape(-1)[:8].tolist())

@@ -1,0 +1,9 @@
+"""repro.core: the paper's contribution -- PPL IR, tiling, metapipelining."""
+from . import affine, codegen_jax, fusion, interchange, ir, rewrite, strip_mine
+from .codegen_jax import execute, jit_execute
+from .ir import (Access, FlatMap, GroupByFold, Map, MultiFold, Pattern,
+                 Tensor, TileCopy, describe, elem, inputs_of, row, signature,
+                 walk, whole)
+from .strip_mine import insert_tile_copies, strip_mine, tile
+from .interchange import interchange, should_split
+from .fusion import lift_tile_stages

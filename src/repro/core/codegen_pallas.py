@@ -1,0 +1,370 @@
+"""Hardware generation: lower tiled PPL IR to Pallas TPU kernels.
+
+This is the paper's §5 code generation step with TPU templates in place
+of MaxJ templates (see Table 4 mapping in DESIGN.md):
+
+  * the outer strided pattern's domain      -> ``pallas_call`` grid
+  * each TileCopy                           -> ``pl.BlockSpec(tile_shape,
+                                               index_map)`` (HBM->VMEM DMA)
+  * double buffers between metapipe stages  -> Pallas grid pipelining
+    (the Mosaic pipeliner double-buffers every BlockSpec operand between
+    grid steps -- exactly the paper's metapipeline semantics)
+  * Map over scalars (Vector template)      -> vectorized body on the tile
+  * MultiFold over scalars (Reduction tree) -> ``jnp.dot``/``jnp.sum`` (MXU)
+  * GroupByFold (CAM template)              -> one-hot matmul accumulation
+    into a revisited output block (sequential TPU grid)
+  * FlatMap (Parallel FIFO template)        -> masked prefix-sum compaction
+    at a dynamic offset carried in SMEM scratch across grid steps
+
+Kernels are validated in ``interpret=True`` mode against the
+``codegen_jax`` oracle; TPU (MXU/VMEM alignment) is the codegen target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ir
+from .affine import AffineMap
+
+INTERPRET = True  # container is CPU-only; flip on real TPU
+
+
+def _call_map(amap: "AffineMap", stack: Tuple) -> Tuple:
+    """Call an AffineMap with a kernel-local stack: pad absent leading
+    (enclosing) indices with zeros, or drop leading entries the map has
+    zero columns for anyway (local maps ignore grid dims)."""
+    n = amap.n_in
+    if len(stack) == n:
+        return amap(*stack)
+    if len(stack) < n:
+        return amap(*((0,) * (n - len(stack)) + tuple(stack)))
+    return amap(*stack[len(stack) - n:])
+
+
+def _block_index_map(copy_map: AffineMap, tile_shape: Tuple[int, ...],
+                     grid_rank: int) -> Callable:
+    """BlockSpec index maps return *block* indices: element base / tile."""
+    for d_out in range(copy_map.n_out):
+        base = copy_map.base[d_out]
+        assert base % tile_shape[d_out] == 0 or base == 0, (
+            "tile base must be block aligned")
+        for d_in in range(copy_map.n_in):
+            s = copy_map.mat[d_out][d_in]
+            assert s % tile_shape[d_out] == 0, (
+                f"copy stride {s} not a multiple of tile {tile_shape}")
+
+    def imap(*grid_idx):
+        full = tuple(grid_idx) + (0,) * (copy_map.n_in - len(grid_idx))
+        elem = copy_map(*full[:copy_map.n_in])
+        return tuple(e // t for e, t in zip(elem, tile_shape))
+
+    return imap
+
+
+def _vmapped_tile_fn(inner: ir.Map, n_reads: int) -> Callable:
+    """Vector template: apply the Map's scalar fn across the whole tile.
+
+    Reads must be tile-local (AffineMap with zero base).  Returns
+    f(grid_idx, *tiles) -> tile of inner.shape.
+    """
+    dom = inner.domain
+
+    def gather(tile, amap: AffineMap, window, idx):
+        starts = _call_map(amap, tuple(idx))
+        starts = tuple(jnp.asarray(s, jnp.int32)
+                       for s in starts[-tile.ndim:])
+        return jnp.squeeze(jax.lax.dynamic_slice(tile, starts, window))
+
+    def run(grid_idx, *tiles):
+        def body(flat):
+            idx = []
+            rem = flat
+            for e in reversed(dom):
+                idx.append(rem % e)
+                rem = rem // e
+            idx = tuple(reversed(idx))
+            stack = tuple(grid_idx) + idx
+            wins = [gather(t, a.index_map, a.window, stack)
+                    for t, a in zip(tiles, inner.reads)]
+            return inner.fn(stack, *wins)
+
+        n = int(np.prod(dom))
+        vals = jax.vmap(body)(jnp.arange(n, dtype=jnp.int32))
+        return vals.reshape(tuple(dom) + vals.shape[1:])
+
+    return run
+
+
+# --------------------------------------------------------------------
+# Tiled Map: MultiFold(grid) write-once { loads; Map(tile) }
+# --------------------------------------------------------------------
+
+
+def lower_tiled_map(p: ir.MultiFold) -> Callable:
+    assert p.strided and p.combine is None and isinstance(p.inner, ir.Map)
+    inner = p.inner
+    grid = tuple(p.domain)
+    loads = [tc for tc in p.loads if isinstance(tc.src, ir.Tensor)]
+    assert len(loads) == len(inner.reads), "all reads must be tiled"
+    tile_fn = _vmapped_tile_fn(inner, len(loads))
+
+    in_specs = [
+        pl.BlockSpec(tc.tile_shape,
+                     _block_index_map(tc.index_map, tc.tile_shape,
+                                      len(grid)))
+        for tc in loads
+    ]
+    out_tile = tuple(p.update_shape)
+    out_map = AffineMap.probe(lambda *g: p.out_index_map(*g), len(grid))
+    out_spec = pl.BlockSpec(out_tile,
+                            _block_index_map(out_map, out_tile, len(grid)))
+
+    def kernel(*refs):
+        *ins, out = refs
+        gidx = tuple(pl.program_id(i) for i in range(len(grid)))
+        out[...] = tile_fn(gidx, *[r[...] for r in ins]).astype(out.dtype)
+
+    order = {tc.uid: i for i, tc in enumerate(loads)}
+
+    def call(**tensors):
+        args = [jnp.asarray(tensors[tc.src.name]) for tc in loads]
+        return pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs, out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(tuple(p.range_shape),
+                                           jnp.dtype(p.dtype)),
+            interpret=INTERPRET)(*args)
+
+    return call
+
+
+# --------------------------------------------------------------------
+# Tiled GEMM (Table 3 interchanged form):
+#   MultiFold(gi,gj) write-once { MultiFold(kk) fold { Map(bi,bj){fold} } }
+# --------------------------------------------------------------------
+
+
+def match_tiled_gemm(p: ir.Pattern) -> bool:
+    return (isinstance(p, ir.MultiFold) and p.strided and p.combine is None
+            and isinstance(p.inner, ir.MultiFold) and p.inner.strided
+            and p.inner.is_fold and isinstance(p.inner.inner, ir.Map))
+
+
+def lower_tiled_gemm(p: ir.MultiFold) -> Callable:
+    """MXU template: the inner Map{fold} is a tile matmul; the strided
+    fold revisits the output block across the reduction grid dim."""
+    assert match_tiled_gemm(p)
+    f = p.inner
+    gi, gj = p.domain
+    (kk,) = f.domain
+    loads = [tc for tc in f.loads if isinstance(tc.src, ir.Tensor)]
+    assert len(loads) == 2, "gemm expects two tiled operands"
+    # operand order from the leaf fold's reads: [0] -> x (bi, bk) indexed
+    # (i, k); [1] -> y (bk, bj) indexed (k, j)  (paper Table 3 layout)
+    leaf = f.inner.inner
+    assert isinstance(leaf, ir.MultiFold) and len(leaf.reads) == 2
+    x_tc = leaf.reads[0].src
+    y_tc = leaf.reads[1].src
+    assert x_tc in loads and y_tc in loads
+    bi, bj = f.range_shape
+    bk = x_tc.tile_shape[1]
+    assert x_tc.tile_shape == (bi, bk) and y_tc.tile_shape == (bk, bj)
+
+    grid = (gi, gj, kk)  # reduction dim innermost: output block revisited
+    in_specs = [
+        pl.BlockSpec((bi, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bj), lambda i, j, k: (k, j)),
+    ]
+    out_spec = pl.BlockSpec((bi, bj), lambda i, j, k: (i, j))
+
+    def kernel(x_ref, y_ref, o_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            x_ref[...], y_ref[...],
+            preferred_element_type=o_ref.dtype)  # MXU reduction tree
+
+    def call(**tensors):
+        x = jnp.asarray(tensors[x_tc.src.name])
+        y = jnp.asarray(tensors[y_tc.src.name])
+        return pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs, out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(tuple(p.range_shape),
+                                           jnp.dtype(p.dtype)),
+            interpret=INTERPRET)(x, y)
+
+    return call
+
+
+# --------------------------------------------------------------------
+# Tiled GroupByFold: GroupByFold(grid){ loads; GroupByFold(tile) }
+# --------------------------------------------------------------------
+
+
+def lower_tiled_groupby(p: ir.GroupByFold,
+                        combine_is_add: bool = True) -> Callable:
+    """CAM template: dense one-hot accumulation.  The output block is
+    revisited on every grid step (constant index map); the TPU grid is
+    sequential so accumulation across steps is well defined."""
+    assert p.strided and isinstance(p.inner, ir.GroupByFold)
+    inner = p.inner
+    (g,) = p.domain
+    (b,) = inner.domain
+    loads = [tc for tc in p.loads if isinstance(tc.src, ir.Tensor)]
+    assert len(loads) == len(inner.reads)
+    elem = tuple(p.elem_shape)
+    k = p.num_keys
+    ew = int(np.prod(elem)) if elem else 1
+
+    in_specs = [
+        pl.BlockSpec(tc.tile_shape,
+                     _block_index_map(tc.index_map, tc.tile_shape, 1))
+        for tc in loads
+    ]
+    out_shape = (k,) + elem
+    out_spec = pl.BlockSpec(out_shape, lambda i: (0,) * (1 + len(elem)))
+
+    def kernel(*refs):
+        *ins, out = refs
+        gi = pl.program_id(0)
+
+        @pl.when(gi == 0)
+        def _init():
+            out[...] = jnp.asarray(p.init(), out.dtype)
+
+        tiles = [r[...] for r in ins]
+
+        def body(l):
+            stack = (gi, l)
+            wins = []
+            for t, a in zip(tiles, inner.reads):
+                starts = _call_map(a.index_map, stack)
+                starts = tuple(jnp.asarray(s, jnp.int32)
+                               for s in starts[-t.ndim:])
+                wins.append(jnp.squeeze(
+                    jax.lax.dynamic_slice(t, starts, a.window)))
+            return inner.fn(stack, *wins)
+
+        keys, vals = jax.vmap(body)(jnp.arange(b, dtype=jnp.int32))
+        onehot = jax.nn.one_hot(keys, k, dtype=out.dtype)       # (b, k)
+        vals2 = jnp.asarray(vals, out.dtype).reshape(b, ew)     # (b, ew)
+        upd = jnp.dot(onehot.T, vals2)                          # MXU scatter
+        out[...] += upd.reshape(out_shape)
+
+    def call(**tensors):
+        args = [jnp.asarray(tensors[tc.src.name]) for tc in loads]
+        return pl.pallas_call(
+            kernel, grid=(g,), in_specs=in_specs, out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct(out_shape, jnp.dtype(p.dtype)),
+            interpret=INTERPRET)(*args)
+
+    return call
+
+
+# --------------------------------------------------------------------
+# Tiled FlatMap: FlatMap(grid){ loads; FlatMap(tile) }
+# --------------------------------------------------------------------
+
+
+def lower_tiled_flatmap(p: ir.FlatMap) -> Callable:
+    """Parallel-FIFO template: per-tile mask + prefix-sum compaction,
+    appended at a dynamic offset carried in SMEM across grid steps."""
+    assert p.strided and isinstance(p.inner, ir.FlatMap)
+    inner = p.inner
+    (g,) = p.domain
+    (b,) = inner.domain
+    m = inner.max_per_iter
+    cap_tile = b * m
+    cap = g * cap_tile
+    loads = [tc for tc in p.loads if isinstance(tc.src, ir.Tensor)]
+    assert len(loads) == len(inner.reads)
+
+    in_specs = [
+        pl.BlockSpec(tc.tile_shape,
+                     _block_index_map(tc.index_map, tc.tile_shape, 1))
+        for tc in loads
+    ]
+    out_specs = [
+        pl.BlockSpec((cap,), lambda i: (0,)),   # FIFO buffer (revisited)
+        pl.BlockSpec((1,), lambda i: (0,)),     # total count
+    ]
+
+    def kernel(*refs):
+        *ins, buf, cnt = refs
+        gi = pl.program_id(0)
+
+        @pl.when(gi == 0)
+        def _init():
+            buf[...] = jnp.zeros_like(buf)
+            cnt[...] = jnp.zeros_like(cnt)
+
+        tiles = [r[...] for r in ins]
+
+        def body(l):
+            stack = (gi, l)
+            wins = []
+            for t, a in zip(tiles, inner.reads):
+                starts = _call_map(a.index_map, stack)
+                starts = tuple(jnp.asarray(s, jnp.int32)
+                               for s in starts[-t.ndim:])
+                wins.append(jnp.squeeze(
+                    jax.lax.dynamic_slice(t, starts, a.window)))
+            return inner.fn(stack, *wins)
+
+        vals, cnts = jax.vmap(body)(jnp.arange(b, dtype=jnp.int32))
+        vals = vals.reshape(b * m)
+        lane = jnp.arange(m)[None, :]
+        valid = (lane < cnts[:, None]).reshape(b * m)
+        # intra-tile prefix-sum compaction (the "parallel FIFO" fill)
+        pos = jnp.cumsum(valid) - 1
+        local_n = valid.sum().astype(jnp.int32)
+        compact = jnp.zeros((cap_tile,), vals.dtype)
+        compact = compact.at[jnp.where(valid, pos, cap_tile - 1)].set(
+            jnp.where(valid, vals, compact[cap_tile - 1]), mode="drop")
+        base = cnt[0]
+        window = jax.lax.dynamic_slice(buf[...], (base,), (cap_tile,))
+        take = jnp.arange(cap_tile) < local_n
+        merged = jnp.where(take, compact, window)
+        buf[...] = jax.lax.dynamic_update_slice(buf[...], merged, (base,))
+        cnt[0] = base + local_n
+
+    def call(**tensors):
+        args = [jnp.asarray(tensors[tc.src.name]) for tc in loads]
+        buf, cnt = pl.pallas_call(
+            kernel, grid=(g,), in_specs=in_specs, out_specs=out_specs,
+            out_shape=[
+                jax.ShapeDtypeStruct((cap,), jnp.dtype(p.dtype)),
+                jax.ShapeDtypeStruct((1,), jnp.int32),
+            ],
+            interpret=INTERPRET)(*args)
+        return buf, cnt[0]
+
+    return call
+
+
+# --------------------------------------------------------------------
+# dispatch
+# --------------------------------------------------------------------
+
+
+def lower(p: ir.Pattern) -> Callable:
+    """Pick the template for a tiled pattern (paper: template selection)."""
+    if match_tiled_gemm(p):
+        return lower_tiled_gemm(p)
+    if isinstance(p, ir.MultiFold) and p.combine is None \
+            and isinstance(p.inner, ir.Map):
+        return lower_tiled_map(p)
+    if isinstance(p, ir.GroupByFold) and p.strided:
+        return lower_tiled_groupby(p)
+    if isinstance(p, ir.FlatMap) and p.strided:
+        return lower_tiled_flatmap(p)
+    raise NotImplementedError(
+        f"no hardware template for {type(p).__name__} (strided="
+        f"{p.strided}); supported: tiled Map/GEMM/GroupByFold/FlatMap")

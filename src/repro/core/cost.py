@@ -1,0 +1,156 @@
+"""Analytic cost model: main-memory traffic and metapipeline overlap.
+
+Reproduces the accounting of the paper's Fig. 5c ("minimum number of
+words read from main memory and on-chip storage ... after each IR
+transformation") and the metapipeline throughput model of §6.
+
+Read model ("register promotion"): an access or tile copy is loaded
+once per iteration of the loop nest *down to the deepest loop index it
+depends on*; loops deeper than that reuse the buffered value.  A copy
+with a constant base (``hoisted``) is loaded exactly once -- the Pipe-0
+preload of Fig. 6.
+
+Hardware constants are the TPU-v5e-class numbers used across the repo
+(197 TFLOP/s bf16, 819 GB/s HBM); the FPGA numbers of the paper map to
+the same two-term structure (compute vs. DRAM stream).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import ir
+from .affine import AffineMap
+
+HBM_BYTES_PER_S = 819e9
+PEAK_FLOPS = 197e12
+VMEM_BYTES = 16 * 2 ** 20
+
+
+@dataclasses.dataclass
+class TrafficReport:
+    """Main-memory words read per tensor + on-chip words per buffer."""
+
+    reads: Dict[str, int]
+    on_chip: Dict[str, int]
+
+    @property
+    def total_reads(self) -> int:
+        return sum(self.reads.values())
+
+    @property
+    def total_on_chip(self) -> int:
+        return sum(self.on_chip.values())
+
+
+def _deepest_dep(amap: AffineMap) -> int:
+    deps = amap.dependent_dims()
+    return max(deps) if deps else -1
+
+
+def _probe(index_map, n_in: int) -> Optional[AffineMap]:
+    if isinstance(index_map, AffineMap):
+        return index_map
+    try:
+        return AffineMap.probe(index_map, n_in)
+    except Exception:
+        return None  # non-affine
+
+
+def _extent_of_dim(levels: List[Tuple[ir.Pattern, int]], dim: int) -> int:
+    for p, off in levels:
+        if off <= dim < off + len(p.domain):
+            return p.domain[dim - off]
+    raise KeyError(dim)
+
+
+def _trips_to(levels: List[Tuple[ir.Pattern, int]], deepest: int) -> int:
+    """Product of loop extents from the root down to ``deepest`` incl."""
+    t = 1
+    for p, off in levels:
+        for j, e in enumerate(p.domain):
+            if off + j <= deepest:
+                t *= e
+    return t
+
+
+def traffic(p: ir.Pattern) -> TrafficReport:
+    reads: Dict[str, int] = {}
+    on_chip: Dict[str, int] = {}
+    buf_idx = [0]
+
+    def visit(q: ir.Pattern, levels):
+        off = (levels[-1][1] + len(levels[-1][0].domain)) if levels else 0
+        path = levels + [(q, off)]
+        stack_len = off + len(q.domain)
+
+        for tc in q.loads:
+            if isinstance(tc.src, ir.Tensor):
+                amap = _probe(tc.index_map, stack_len)
+                if tc.hoisted or (amap is not None
+                                  and not amap.dependent_dims()):
+                    trips = 1
+                else:
+                    trips = _trips_to(path, _deepest_dep(amap))
+                reads[tc.src.name] = (reads.get(tc.src.name, 0)
+                                      + trips * tc.words // tc.reuse)
+                on_chip[f"{tc.name}#{buf_idx[0]}"] = tc.words
+            else:
+                on_chip[f"{tc.name}#{buf_idx[0]}"] = tc.words
+                visit(tc.src, path)
+            buf_idx[0] += 1
+
+        for a in q.accesses:
+            if isinstance(a.src, ir.Tensor):
+                amap = _probe(a.index_map, stack_len)
+                if amap is None:  # non-affine: every iteration pays
+                    trips = _trips_to(path, stack_len - 1)
+                else:
+                    deep = _deepest_dep(amap)
+                    trips = _trips_to(path, deep) if deep >= 0 else 1
+                reads[a.src.name] = (reads.get(a.src.name, 0)
+                                     + trips * a.words)
+                # untiled direct access still needs a window's worth of
+                # registers/buffer (the paper's "d" for fused k-means)
+                key = f"{a.src.name}_window"
+                on_chip[key] = max(on_chip.get(key, 0), a.words)
+            elif isinstance(a.src, ir.Pattern):
+                visit(a.src, path)
+        if q.inner is not None:
+            visit(q.inner, path)
+
+    visit(p, [])
+    return TrafficReport(reads, on_chip)
+
+
+# ------------------------------------------------------------------ time
+@dataclasses.dataclass
+class StageCost:
+    name: str
+    kind: str            # load | compute | store
+    seconds: float
+
+
+def metapipeline_time(stage_costs: List[StageCost],
+                      outer_trips: int) -> Tuple[float, float]:
+    """(sequential, metapipelined) execution time for an outer loop whose
+    body is the given stages.  Sequential = sum per iteration; the
+    metapipeline overlaps stages across outer iterations (double
+    buffers), so steady-state cost = max stage (plus pipeline fill)."""
+    per_iter = [s.seconds for s in stage_costs]
+    seq = outer_trips * sum(per_iter)
+    fill = sum(per_iter) - max(per_iter)
+    pipe = fill + outer_trips * max(per_iter)
+    return seq, pipe
+
+
+def stage_seconds_load(words: int, bytes_per_word: int = 4,
+                       bw: float = HBM_BYTES_PER_S) -> float:
+    return words * bytes_per_word / bw
+
+
+def stage_seconds_compute(flops: float,
+                          peak: float = PEAK_FLOPS) -> float:
+    return flops / peak

@@ -1,0 +1,113 @@
+"""Tile-level fusion: lift per-element pattern sources to per-tile stages.
+
+The paper assumes aggressive vertical fusion has run *before* tiling
+(Fig. 4 is the fused k-means).  After strip mining, a fused body that
+computes a per-element intermediate (e.g. the closest-centroid pair for
+one point) sits inside the tile loop as a per-element pattern source.
+Splitting it out per the paper's heuristic creates a per-*tile* stage --
+the `minDistWithInds` stage of Fig. 5b -- which (a) enables pattern
+interchange and (b) becomes a metapipeline stage with its own double
+buffer.
+
+``lift_tile_stages`` performs that split: for an unstrided pattern Q
+(the tile loop) directly inside a strided outer O, any access whose
+source is a per-element pattern S is rewritten to read row ``l`` of a
+new stage ``S_tile = Map(Q.domain){ S }`` attached to O as a
+pattern-valued TileCopy.  The split is applied only when the
+intermediate (``Q.domain + S.shape``) fits on-chip (``should_split``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+from . import ir
+from .affine import AffineMap
+from .interchange import should_split
+
+
+def _lift_in(outer: ir.Pattern, enc: int, budget: int) -> ir.Pattern:
+    """outer = strided pattern; examine its direct inner (the tile loop)."""
+    q = outer.inner
+    if q is None or q.strided:
+        return outer
+    kq = len(q.domain)
+    new_reads = []
+    new_stages = []
+    memo: Dict[int, ir.TileCopy] = {}
+    changed = False
+    for a in q.accesses:
+        s = a.src
+        if not isinstance(s, ir.Pattern):
+            new_reads.append(a)
+            continue
+        inter_shape = tuple(q.domain) + tuple(s.shape)
+        if not should_split(int(np.prod(inter_shape)), budget):
+            new_reads.append(a)  # paper heuristic: keep fused
+            continue
+        if id(s) in memo:
+            tc = memo[id(s)]
+        else:
+            # S's callables were written against (enc_outer, q_local, own);
+            # inside Map(Q.domain) at outer level the stack is identical.
+            stage = ir.Map(domain=tuple(q.domain), elem_shape=tuple(s.shape),
+                           inner=s, name=s.name + "_stage", dtype=s.dtype)
+            n_out = len(stage.shape)
+            tc = ir.TileCopy(
+                src=stage,
+                index_map=AffineMap((0,) * n_out,
+                                    tuple((0,) * enc for _ in range(n_out)),
+                                    arity=enc),
+                tile_shape=stage.shape, name=s.name + "_stage")
+            memo[id(s)] = tc
+            new_stages.append(tc)
+        # Q's access now reads its local row of the staged tile
+        n_out = len(tc.tile_shape)
+        stack_len = enc + kq
+        mat = []
+        for d_out in range(n_out):
+            row = [0] * stack_len
+            if d_out < kq:  # leading dims index the tile row by q-local idx
+                row[enc + d_out] = 1
+            mat.append(tuple(row))
+        window = (1,) * kq + tuple(s.shape)
+        new_reads.append(dataclasses.replace(
+            a, src=tc,
+            index_map=AffineMap((0,) * n_out, tuple(mat), arity=stack_len),
+            window=window))
+        changed = True
+    if not changed:
+        return outer
+    q2 = dataclasses.replace(q, reads=tuple(new_reads))
+    return dataclasses.replace(
+        outer, inner=q2, tile_loads=tuple(outer.loads) + tuple(new_stages))
+
+
+def lift_tile_stages(p: ir.Pattern, *, enc: int = 0,
+                     vmem_budget_words: int = 4 * 1024 * 1024) -> ir.Pattern:
+    """Apply the stage-lifting split everywhere it matches (post-order)."""
+
+    def visit(node: ir.Pattern, enc_: int) -> ir.Pattern:
+        updates = {}
+        if node.inner is not None:
+            updates["inner"] = visit(node.inner, enc_ + len(node.domain))
+        rr, ch = [], False
+        for a in node.accesses:
+            if isinstance(a.src, ir.Pattern):
+                ns = visit(a.src, enc_ + len(node.domain))
+                if ns is not a.src:
+                    rr.append(dataclasses.replace(a, src=ns))
+                    ch = True
+                    continue
+            rr.append(a)
+        if ch:
+            updates["reads"] = tuple(rr)
+        if updates:
+            node = dataclasses.replace(node, **updates)
+        if node.strided:
+            node = _lift_in(node, enc_ + len(node.domain), vmem_budget_words)
+        return node
+
+    return visit(p, enc)

@@ -1,0 +1,120 @@
+"""Memory allocation analysis (paper §5 "Memory Allocation").
+
+Walks the tiled IR and assigns every memory region to a hardware
+structure, mirroring Table 4 of the paper with TPU-idiomatic targets:
+
+  statically-sized array (tile copy)    -> Buffer (VMEM alloc / BlockSpec)
+  buffer crossing metapipeline stages   -> Double buffer (Pallas grid
+                                           pipelining realizes this)
+  non-affine access on a dynamic array  -> Cache  (TPU: gather via
+                                           dynamic_slice; no tag memory)
+  FlatMap output                        -> Parallel FIFO (TPU: mask +
+                                           prefix-sum compaction buffer)
+  GroupByFold accumulator               -> CAM (TPU: dense one-hot
+                                           accumulator, num_keys bound)
+
+The pass also checks the total against the VMEM budget -- on the FPGA
+this is BRAM capacity; exceeding it is a compile-time error in both
+worlds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from . import ir
+from .cost import VMEM_BYTES
+
+
+@dataclasses.dataclass
+class BufferAlloc:
+    name: str
+    kind: str          # buffer | double_buffer | cache | fifo | cam_dense
+    words: int
+    dtype: str
+    double_buffered: bool
+    ports: int         # readers + writers (template parameterization)
+
+
+@dataclasses.dataclass
+class MemoryPlan:
+    buffers: List[BufferAlloc]
+    vmem_budget_bytes: int
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b.words * np.dtype(b.dtype).itemsize *
+                   (2 if b.double_buffered else 1) for b in self.buffers)
+
+    @property
+    def fits(self) -> bool:
+        return self.total_bytes <= self.vmem_budget_bytes
+
+    def describe(self) -> str:
+        lines = [f"{'name':24s} {'kind':14s} {'words':>10s} "
+                 f"{'dbl':>4s} {'ports':>5s}"]
+        for b in self.buffers:
+            lines.append(f"{b.name:24s} {b.kind:14s} {b.words:>10d} "
+                         f"{str(b.double_buffered):>4s} {b.ports:>5d}")
+        lines.append(f"total {self.total_bytes} B / budget "
+                     f"{self.vmem_budget_bytes} B -> "
+                     f"{'OK' if self.fits else 'OVERFLOW'}")
+        return "\n".join(lines)
+
+
+def plan_memory(p: ir.Pattern,
+                vmem_budget_bytes: int = VMEM_BYTES) -> MemoryPlan:
+    buffers: List[BufferAlloc] = []
+    readers: Dict[str, int] = {}
+
+    # count readers of each tile copy (port analysis)
+    for q in ir.walk(p):
+        for a in q.accesses:
+            if isinstance(a.src, ir.TileCopy):
+                readers[a.src.uid] = readers.get(a.src.uid, 0) + 1
+
+    seen = set()
+    idx = [0]
+
+    def visit(q: ir.Pattern, depth: int, in_pipeline: bool):
+        for tc in q.loads:
+            if tc.uid in seen:
+                continue
+            seen.add(tc.uid)
+            dbl = in_pipeline and not tc.hoisted
+            kind = "double_buffer" if dbl else "buffer"
+            buffers.append(BufferAlloc(
+                name=f"{tc.name}#{idx[0]}", kind=kind, words=tc.words,
+                dtype=tc.dtype, double_buffered=dbl,
+                ports=readers.get(tc.uid, 1) + 1))
+            idx[0] += 1
+            if isinstance(tc.src, ir.Pattern):
+                visit(tc.src, depth + 1, q.strided)
+        for a in q.accesses:
+            if isinstance(a.src, ir.Tensor) and not a.affine:
+                buffers.append(BufferAlloc(
+                    name=f"{a.src.name}_cache#{idx[0]}", kind="cache",
+                    words=a.words, dtype=a.src.dtype,
+                    double_buffered=False, ports=2))
+                idx[0] += 1
+            elif isinstance(a.src, ir.Pattern):
+                visit(a.src, depth + 1, q.strided)
+        if isinstance(q, ir.GroupByFold) and not q.strided:
+            buffers.append(BufferAlloc(
+                name=f"{q.name}_acc#{idx[0]}", kind="cam_dense",
+                words=int(np.prod(q.shape)), dtype=q.dtype,
+                double_buffered=False, ports=2))
+            idx[0] += 1
+        if isinstance(q, ir.FlatMap) and not q.strided:
+            buffers.append(BufferAlloc(
+                name=f"{q.name}_fifo#{idx[0]}", kind="fifo",
+                words=int(np.prod(q.shape)), dtype=q.dtype,
+                double_buffered=False, ports=2))
+            idx[0] += 1
+        if q.inner is not None:
+            visit(q.inner, depth + 1, q.strided)
+
+    visit(p, 0, False)
+    return MemoryPlan(buffers, vmem_budget_bytes)

@@ -1,0 +1,56 @@
+"""Filter+reduce kernel (TPC-H Q6 shape): predicate mask, weighted sum.
+
+The FlatMap(filter)+fold fusion of the paper lowered to TPU: the FPGA
+streams records through a predicate FIFO into a reduction tree; here
+each tile is masked on the VPU and reduced into a revisited scalar
+accumulator block -- the dynamic-size FIFO disappears because the
+reduction consumes values in place (the paper's vertical fusion).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INTERPRET = True
+
+
+def _fr_kernel(x_ref, w_ref, lo_ref, hi_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    lo = lo_ref[0]
+    hi = hi_ref[0]
+    pred = (x >= lo) & (x < hi)
+    o_ref[0, 0] += jnp.sum(jnp.where(pred, x * w, 0.0))
+
+
+def filter_reduce(x: jax.Array, weight: jax.Array, lo, hi, *,
+                  block_t: int = 1024,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    (t,) = x.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0
+    lo = jnp.asarray([lo], jnp.float32)
+    hi = jnp.asarray([hi], jnp.float32)
+    out = pl.pallas_call(
+        _fr_kernel,
+        grid=(t // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=INTERPRET if interpret is None else interpret,
+    )(x, weight, lo, hi)
+    return out[0, 0]

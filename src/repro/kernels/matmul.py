@@ -1,0 +1,67 @@
+"""Tiled GEMM Pallas kernel -- the paper's Table 3 worked example.
+
+The block structure is exactly the interchanged tiled form the PPL
+transformation derives: grid (m/bm, n/bn, p/bk) with the reduction dim
+innermost, operand tiles as BlockSpecs (= the xTile/yTile copies), and
+an fp32 VMEM accumulator revisited across the reduction grid dim (= the
+accumulator-dedup'd MultiFold).  Pallas's grid pipeliner double-buffers
+the operand tiles between grid steps -- the metapipeline.
+
+Tile sizes default to MXU-aligned (128) and can be chosen by the PPL
+cost model (see repro.kernels.autotile).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INTERPRET = True  # CPU container; flip on real TPU
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(x: jax.Array, y: jax.Array, *,
+           block_m: int = 128, block_n: int = 128, block_k: int = 128,
+           out_dtype: Optional[jnp.dtype] = None,
+           interpret: Optional[bool] = None) -> jax.Array:
+    """``x @ y`` with explicit VMEM tiling. Shapes must divide blocks."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        (m, n, k), (block_m, block_n, block_k))
+    out_dtype = out_dtype or x.dtype
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=INTERPRET if interpret is None else interpret,
+    )(x, y)

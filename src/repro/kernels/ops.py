@@ -1,0 +1,67 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Every op takes ``use_pallas``: True -> the Pallas kernel (interpret mode
+on CPU, compiled on TPU); False -> the jnp oracle (used by the 512-device
+dry-run, where interpret-mode kernels would be pure overhead).  Both
+paths are numerically validated against each other in tests/.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import filter_reduce as _fr
+from . import flash_attention as _fa
+from . import groupby_fold as _gbf
+from . import matmul as _mm
+from . import ref
+from . import ssd_scan as _ssd
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_m",
+                                             "block_n", "block_k"))
+def matmul(x, y, *, use_pallas: bool = True, block_m: int = 128,
+           block_n: int = 128, block_k: int = 128):
+    if use_pallas:
+        return _mm.matmul(x, y, block_m=block_m, block_n=block_n,
+                          block_k=block_k)
+    return ref.matmul(x, y).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "use_pallas", "block_q",
+                                             "block_k"))
+def attention(q, k, v, *, causal: bool = True,
+              window: Optional[int] = None, use_pallas: bool = True,
+              block_q: int = 128, block_k: int = 128):
+    if use_pallas:
+        return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k)
+    return ref.attention(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128, use_pallas: bool = True):
+    if use_pallas:
+        return _ssd.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    return ref.ssd_scan(x, dt, A, B, C)
+
+
+@functools.partial(jax.jit, static_argnames=("num_keys", "use_pallas",
+                                             "block_t"))
+def groupby(keys, values, num_keys: int, *, use_pallas: bool = True,
+            block_t: int = 256):
+    if use_pallas:
+        return _gbf.groupby_fold(keys, values, num_keys, block_t=block_t)
+    return ref.groupby_fold(keys, values, num_keys)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "block_t"))
+def filter_sum(x, weight, lo, hi, *, use_pallas: bool = True,
+               block_t: int = 1024):
+    if use_pallas:
+        return _fr.filter_reduce(x, weight, lo, hi, block_t=block_t)
+    return ref.filter_reduce(x, jnp.float32(lo), jnp.float32(hi), weight)

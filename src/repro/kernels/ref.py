@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical definition, written for clarity and
+numerical trustworthiness, not speed.  Kernel tests sweep shapes/dtypes
+and assert allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              window: Optional[int] = None,
+              scale: Optional[float] = None) -> jax.Array:
+    """Grouped-query attention oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); Hq % Hkv == 0.
+    ``window`` = sliding-window size (Mistral/Mixtral SWA): query i
+    attends to keys in (i - window, i].
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kq.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # decode offset
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array) -> jax.Array:
+    """Mamba-2 SSD (state-space duality) oracle -- sequential recurrence.
+
+    x:  (batch, seq, heads, head_dim)
+    dt: (batch, seq, heads)        positive step sizes
+    A:  (heads,)                   negative decay rates
+    B:  (batch, seq, state)        input projection (shared across heads)
+    C:  (batch, seq, state)        output projection
+    Returns y: (batch, seq, heads, head_dim).
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t^T h_t
+    """
+    bsz, seq, h, dh = x.shape
+    n = B.shape[-1]
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp  # (h,dh), (h,), (n,), (n,)
+        decay = jnp.exp(A * dtt)[:, None, None]            # (h,1,1)
+        hstate = hstate * decay + (dtt[:, None, None]
+                                   * Bt[None, :, None]
+                                   * xt[:, None, :])        # (h,n,dh)
+        yt = jnp.einsum("n,hnd->hd", Ct, hstate)
+        return hstate, yt
+
+    def per_batch(xb, dtb, Bb, Cb):
+        h0 = jnp.zeros((h, n, dh), jnp.float32)
+        _, y = jax.lax.scan(step, h0,
+                            (xb.astype(jnp.float32),
+                             dtb.astype(jnp.float32),
+                             Bb.astype(jnp.float32),
+                             Cb.astype(jnp.float32)))
+        return y
+
+    y = jax.vmap(per_batch)(x, dt, B, C)
+    return y.astype(x.dtype)
+
+
+def groupby_fold(keys: jax.Array, values: jax.Array,
+                 num_keys: int) -> jax.Array:
+    """Dense keyed sum: out[k] = sum of values[i] with keys[i] == k."""
+    onehot = jax.nn.one_hot(keys, num_keys, dtype=jnp.float32)
+    return jnp.einsum("ik,i...->k...", onehot,
+                      values.astype(jnp.float32))
+
+
+def filter_reduce(x: jax.Array, lo: jax.Array, hi: jax.Array,
+                  weight: jax.Array) -> jax.Array:
+    """TPC-H Q6 shape: sum(weight[i] * x[i]) over lo <= x[i] < hi."""
+    pred = (x >= lo) & (x < hi)
+    return jnp.sum(jnp.where(pred, x.astype(jnp.float32)
+                             * weight.astype(jnp.float32), 0.0))

@@ -1,0 +1,82 @@
+"""Serving driver: batched prefill + decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+        --smoke --batch 4 --prompt-len 32 --gen 16
+
+Demonstrates the full inference path (the ``decode_*`` dry-run shapes
+lower exactly this ``serve_step``): prefill the prompt token-by-token
+into the cache, then greedy-decode ``--gen`` new tokens.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.launch import steps as steps_mod
+from repro.models import model
+
+
+def serve(arch: str, smoke: bool, batch: int, prompt_len: int,
+          gen: int, seed: int = 0):
+    cfg = get_config(arch, smoke=smoke)
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    max_len = prompt_len + gen
+    cache = model.init_cache(cfg, batch, max_len)
+    step_fn = jax.jit(steps_mod.make_serve_step(cfg), donate_argnums=(1,))
+
+    rng = np.random.RandomState(seed)
+    if cfg.n_codebooks:
+        prompt = rng.randint(0, cfg.vocab,
+                             (batch, prompt_len, cfg.n_codebooks))
+    else:
+        prompt = rng.randint(0, cfg.vocab, (batch, prompt_len))
+    prompt = jnp.asarray(prompt, jnp.int32)
+
+    # prefill token-by-token through the decode path (a production
+    # server would use the batched prefill_step; this exercises the
+    # cache machinery end to end)
+    t0 = time.time()
+    nxt = None
+    for i in range(prompt_len):
+        tok = prompt[:, i:i + 1]
+        nxt, cache = step_fn(params, cache, tok, jnp.int32(i))
+    prefill_s = time.time() - t0
+
+    out_tokens = []
+    t0 = time.time()
+    for i in range(prompt_len, prompt_len + gen):
+        if cfg.n_codebooks:
+            tok = nxt.reshape(batch, 1, cfg.n_codebooks)
+        else:
+            tok = nxt.reshape(batch, 1)
+        nxt, cache = step_fn(params, cache, tok, jnp.int32(i))
+        out_tokens.append(np.asarray(nxt))
+    decode_s = time.time() - t0
+
+    toks = np.stack(out_tokens, axis=1)
+    print(f"prefill {prompt_len} tokens: {prefill_s:.2f}s; "
+          f"decode {gen} tokens: {decode_s:.2f}s "
+          f"({decode_s / max(gen,1) * 1e3:.0f} ms/token)")
+    return toks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    toks = serve(args.arch, args.smoke, args.batch, args.prompt_len,
+                 args.gen)
+    print("generated token block:", toks.shape)
+
+
+if __name__ == "__main__":
+    main()

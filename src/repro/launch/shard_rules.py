@@ -1,0 +1,190 @@
+"""Sharding rules: params, optimizer state, activations, caches.
+
+Single source of truth for how every tensor maps onto the production
+mesh.  Divisibility is always checked -- dims that do not divide the
+mesh axis (granite's 49155 vocab, internvl's 14 heads) silently fall
+back to replication for that dim, which GSPMD handles with local
+all-gathers (noted in EXPERIMENTS.md §Dry-run).
+
+Param rules (Megatron pairing -- one all-reduce per sublayer):
+  wq/wk/wv : shard output columns over "model"
+  wo       : shard input rows over "model"
+  w1/w3    : columns over "model";  w2: rows over "model"
+  experts  : expert dim over "model" when divisible (EP), else the
+             ffn dim (TP inside experts -- Mixtral's 8 experts on a
+             16-way axis)
+  embed/lm_head: vocab dim over "model"
+ZeRO-1: optimizer m/v/ef additionally shard their largest replicated
+dim over ("pod","data") when divisible.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# param-name suffix -> spec template (dims right-aligned onto the shape;
+# leading stacked layer dims are None)
+_RULES = {
+    "embed": ("model", None),
+    "lm_head": (None, "model"),
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    "wo": ("model", None),
+    "w1": (None, "model"), "w3": (None, "model"), "w2": ("model", None),
+    # moe: expert dim first (EP)
+    "moe_we1": ("model", None, None), "moe_we3": ("model", None, None),
+    "moe_we2": ("model", None, None),
+    "moe_router": (None, "model"),
+    "moe_ws1": (None, "model"), "moe_ws3": (None, "model"),
+    "moe_ws2": ("model", None),
+    # ssm blocks
+    "m_in_proj": (None, "model"), "m_out_proj": ("model", None),
+    "m_conv_w": (None, "model"),
+    # shared attention block (zamba)
+    "s_wq": (None, "model"), "s_wk": (None, "model"),
+    "s_wv": (None, "model"), "s_wo": ("model", None),
+    "s_w1": (None, "model"), "s_w3": (None, "model"),
+    "s_w2": ("model", None),
+}
+
+_MOE_EP_FALLBACK = {  # experts don't divide: TP inside experts instead
+    "moe_we1": (None, None, "model"), "moe_we3": (None, None, "model"),
+    "moe_we2": (None, "model", None),
+}
+
+
+def _fit(spec: Tuple, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Right-align the rule onto the shape, pad leading None, and drop
+    axes that do not divide."""
+    full = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    fixed = []
+    for dim, ax in zip(shape, full):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in
+                            (ax if isinstance(ax, tuple) else (ax,))]))
+        fixed.append(ax if dim % size == 0 else None)
+    return P(*fixed)
+
+
+def param_sharding(cfg: ModelConfig, mesh: Mesh,
+                   param_specs: Dict[str, Any]) -> Dict[str, NamedSharding]:
+    out = {}
+    n_model = mesh.shape["model"]
+    dax = _data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dax]))
+    for name, spec in param_specs.items():
+        shape = spec.shape
+        rule = None
+        for suffix, r in _RULES.items():
+            if name == suffix or name.endswith(suffix):
+                rule = r
+                break
+        if rule is None:
+            out[name] = NamedSharding(mesh, P())
+            continue
+        if name in _MOE_EP_FALLBACK and shape[-3] % n_model != 0:
+            rule = _MOE_EP_FALLBACK[name]
+        pspec = _fit(rule, shape, mesh)
+        if cfg.fsdp and len(shape) >= 2:
+            # ZeRO-3: also shard a still-replicated divisible dim over
+            # data(+pod); GSPMD all-gathers per layer (FSDP).  Prefer a
+            # WEIGHT dim over the stacked layer dim (dim 0 of >=3-D
+            # params): sharding the scan axis makes the backward scan
+            # accumulate FULL stacked fp32 grads before reduce-scatter
+            # (58 GB for qwen2-72b; see EXPERIMENTS.md §Perf).
+            parts = list(pspec) + [None] * (len(shape) - len(pspec))
+            used = {a for ax in parts
+                    for a in (ax if isinstance(ax, tuple) else (ax,)) if a}
+            free = tuple(a for a in dax if a not in used)
+            if free:
+                fsize = int(np.prod([mesh.shape[a] for a in free]))
+                order = list(range(len(shape)))
+                if len(shape) >= 3:
+                    order = order[1:] + [0]  # weight dims first
+                for di in order:
+                    if parts[di] is None and shape[di] % fsize == 0:
+                        parts[di] = free if len(free) > 1 else free[0]
+                        break
+            pspec = P(*parts)
+        out[name] = NamedSharding(mesh, pspec)
+    return out
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return (("pod", "data") if "pod" in mesh.shape.keys() else ("data",))
+
+
+def opt_state_sharding(cfg: ModelConfig, mesh: Mesh, param_specs,
+                       opt_specs) -> Any:
+    """ZeRO-1: m/v/ef shard like their param, plus the first still-
+    replicated dim shards over the data(+pod) axes when divisible."""
+    psh = param_sharding(cfg, mesh, param_specs)
+    dax = _data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dax]))
+
+    def zero1(name, spec):
+        base = psh[name].spec
+        parts = list(base) + [None] * (len(spec.shape) - len(base))
+        used = set()
+        for ax in parts:
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if a:
+                    used.add(a)
+        free = tuple(a for a in dax if a not in used)
+        if free:
+            fsize = int(np.prod([mesh.shape[a] for a in free]))
+            for d, (dim, ax) in enumerate(zip(spec.shape, parts)):
+                if ax is None and dim % fsize == 0:
+                    parts[d] = free if len(free) > 1 else free[0]
+                    break
+        return NamedSharding(mesh, P(*parts))
+
+    import jax.tree_util as jtu
+    from repro.optim.adamw import AdamWState
+
+    def map_tree(tree):
+        return {k: zero1(k, v) for k, v in tree.items()}
+
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=map_tree(opt_specs.m), v=map_tree(opt_specs.v),
+        ef=None if opt_specs.ef is None else map_tree(opt_specs.ef))
+
+
+def batch_sharding(mesh: Mesh, specs: Dict[str, Any]
+                   ) -> Dict[str, NamedSharding]:
+    dax = _data_axes(mesh)
+    ax = dax if len(dax) > 1 else dax[0]
+    out = {}
+    for name, spec in specs.items():
+        parts = [None] * len(spec.shape)
+        if spec.shape and spec.shape[0] > 1:
+            parts[0] = ax
+        out[name] = NamedSharding(mesh, P(*parts))
+    return out
+
+
+def cache_sharding(cfg: ModelConfig, mesh: Mesh, cache_specs) -> Any:
+    """KV/SSM caches: batch over data(+pod), heads over model."""
+    dax = _data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in dax]))
+    n_model = mesh.shape["model"]
+    ax = dax if len(dax) > 1 else dax[0]
+
+    def one(spec):
+        # layouts: (L, B, H, C, dh) or (L, B, K, C) or (L, B, H, N, dh)
+        parts = [None] * len(spec.shape)
+        if len(spec.shape) >= 2 and spec.shape[1] % dsize == 0:
+            parts[1] = ax
+        if len(spec.shape) >= 3 and spec.shape[2] % n_model == 0:
+            parts[2] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map(one, cache_specs)

@@ -1,0 +1,152 @@
+"""Zamba-2-style hybrid: Mamba-2 backbone + a *shared* attention block.
+
+One transformer block's weights are reused at every ``shared_attn_every``
+Mamba layers (arXiv:2411.15242): the weights are closed over by the scan
+body (not scanned), which is exactly how parameter sharing stays compact
+in the lowered HLO.  Each application keeps its own KV cache slot.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import ssm as ssm_mod
+from . import transformer as tr
+from .config import ModelConfig
+from .sharding import hint
+
+Params = Dict[str, Any]
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.padded_vocab
+    shapes: Dict[str, Tuple[Tuple[int, ...], str]] = {
+        "embed": ((v, d), "embed"),
+        "lm_head": ((d, v), "dense"),
+        "final_norm": ((d,), "zeros"),
+    }
+    shapes.update(ssm_mod.block_param_shapes(cfg, cfg.n_layers, "m_"))
+    # ONE shared attention + ffn block (leading dim 1 for uniformity)
+    qk, kv = cfg.qk_dim, cfg.kv_dim
+    shapes.update({
+        "s_ln1": ((d,), "zeros"), "s_ln2": ((d,), "zeros"),
+        "s_wq": ((d, qk), "dense"), "s_wk": ((d, kv), "dense"),
+        "s_wv": ((d, kv), "dense"), "s_wo": ((qk, d), "dense"),
+        "s_w1": ((d, f), "dense"), "s_w2": ((f, d), "dense"),
+        "s_w3": ((d, f), "dense"),
+    })
+    return shapes
+
+
+def _shared_slice(params: Params) -> Dict:
+    return {k[2:]: v for k, v in params.items() if k.startswith("s_")}
+
+
+def forward(params: Params, cfg: ModelConfig,
+            tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+    shared = _shared_slice(params)
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    m_stacks = {k: v for k, v in params.items() if k.startswith("m_")}
+
+    def group(x, slices):
+        for i in range(every):
+            sl = {k: v[i] for k, v in slices.items()}
+            x, _ = ssm_mod.block_forward(sl, x, cfg, prefix="m_")
+        # shared attention block (weights closed over, not scanned)
+        a, _ = tr._attn(shared, L.rms_norm(x, shared["ln1"]), cfg,
+                        positions)
+        x = x + a
+        x = x + tr._dense_ffn(shared, L.rms_norm(x, shared["ln2"]), cfg)
+        x = hint(x, "data", "model", None)  # sequence parallelism
+        return x, None
+
+    if cfg.remat:
+        group = jax.checkpoint(
+            group, policy=jax.checkpoint_policies.nothing_saveable)
+
+    stk = jax.tree.map(
+        lambda t: t.reshape((n_groups, every) + t.shape[1:]), m_stacks)
+    x, _ = L.scan_layers(group, x, stk, cfg.unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    apps = n_attn_apps(cfg)
+    c = tr.cache_len(cfg, max_len)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "ssm": ssm_mod.init_state(cfg, batch),
+        "k": jnp.zeros((apps, batch, cfg.n_kv_heads, c, cfg.head_dim), dt),
+        "v": jnp.zeros((apps, batch, cfg.n_kv_heads, c, cfg.head_dim), dt),
+    }
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    apps = n_attn_apps(cfg)
+    c = tr.cache_len(cfg, max_len)
+    dt = jnp.dtype(cfg.dtype)
+    shp = (apps, batch, cfg.n_kv_heads, c, cfg.head_dim)
+    return {
+        "ssm": ssm_mod.state_specs(cfg, batch),
+        "k": jax.ShapeDtypeStruct(shp, dt),
+        "v": jax.ShapeDtypeStruct(shp, dt),
+    }
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
+                tokens: jax.Array, index: jax.Array):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.full((1,), index, jnp.int32)
+    shared = _shared_slice(params)
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    m_stacks = {k: v for k, v in params.items() if k.startswith("m_")}
+
+    def group(x, slices):
+        slc, conv_st, ssm_st, kc, vc = slices
+        new_conv, new_ssm = [], []
+        for i in range(every):
+            sl = {k: v[i] for k, v in slc.items()}
+            x, st = ssm_mod.block_forward(
+                sl, x, cfg, state={"conv": conv_st[i], "ssm": ssm_st[i]},
+                prefix="m_")
+            new_conv.append(st["conv"])
+            new_ssm.append(st["ssm"])
+        a, (nk, nv) = tr._attn(shared, L.rms_norm(x, shared["ln1"]), cfg,
+                               positions, kv_cache=(kc, vc),
+                               cache_index=index)
+        x = x + a
+        x = x + tr._dense_ffn(shared, L.rms_norm(x, shared["ln2"]), cfg)
+        return x, (jnp.stack(new_conv), jnp.stack(new_ssm), nk, nv)
+
+    stk = jax.tree.map(
+        lambda t: t.reshape((n_groups, every) + t.shape[1:]), m_stacks)
+    conv_stk = cache["ssm"]["conv"].reshape(
+        (n_groups, every) + cache["ssm"]["conv"].shape[1:])
+    ssm_stk = cache["ssm"]["ssm"].reshape(
+        (n_groups, every) + cache["ssm"]["ssm"].shape[1:])
+
+    x, (nc, ns, nk, nv) = L.scan_layers(
+        group, x, (stk, conv_stk, ssm_stk, cache["k"], cache["v"]),
+        cfg.unroll)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    new_cache = {
+        "ssm": {"conv": nc.reshape(cache["ssm"]["conv"].shape),
+                "ssm": ns.reshape(cache["ssm"]["ssm"].shape)},
+        "k": nk, "v": nv,
+    }
+    return logits, new_cache

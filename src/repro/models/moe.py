@@ -1,0 +1,147 @@
+"""Mixture-of-experts FFN sublayer (GShard-style grouped dense dispatch).
+
+Tokens are split into groups (sharded over the data axis); each group
+routes its tokens independently to (expert, capacity-slot) positions via
+one-hot dispatch/combine tensors, so the whole layer is einsums --
+GSPMD-friendly: with experts sharded over the "model" axis the dispatch
+einsum lowers to the expert-parallel all-to-all.  The routing count
+accumulation is a GroupByFold (the paper's CAM template -- see
+kernels/groupby_fold.py for the validated kernel).
+
+Supports Mixtral (8e top-2, every layer) and Llama-4 Maverick (128e
+top-1, every other layer, + shared expert).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from .sharding import hint
+
+GROUP_SIZE = 4096  # tokens per routing group (capacity is per group)
+
+
+def param_shapes(cfg: ModelConfig, n_moe_layers: int) -> Dict[str, Tuple]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    shapes = {
+        "router": (n_moe_layers, d, e),
+        "we1": (n_moe_layers, e, d, f),
+        "we3": (n_moe_layers, e, d, f),
+        "we2": (n_moe_layers, e, f, d),
+    }
+    if cfg.shared_expert:
+        shapes.update({
+            "ws1": (n_moe_layers, d, f),
+            "ws3": (n_moe_layers, d, f),
+            "ws2": (n_moe_layers, f, d),
+        })
+    return shapes
+
+
+def capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * group_tokens * cfg.top_k
+              / cfg.n_experts)
+    return max(8, min(group_tokens, (cap + 7) // 8 * 8))
+
+
+def moe_ffn(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).  ``p`` holds one layer's slices."""
+    b, s, d = x.shape
+    n_tok = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    gsz = min(GROUP_SIZE, n_tok)
+    assert n_tok % gsz == 0, (n_tok, gsz)
+    g = n_tok // gsz
+    cap = capacity(cfg, gsz)
+    xt = x.reshape(g, gsz, d)
+    xt = hint(xt, "data", None, None)
+
+    gate_logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                             p["router"].astype(jnp.float32))
+    topv, topi = jax.lax.top_k(gate_logits, k)               # (g, t, k)
+    gates = jax.nn.softmax(topv, axis=-1)
+
+    # slot assignment: rank within each expert's segment, computed by
+    # sorting choices by expert id (MegaBlocks-style) -- O(t*k) memory
+    # instead of the (t*k, e) one-hot cumsum (537 GB at 1M tokens x 128
+    # experts).  This is a GroupByFold over the token stream (the CAM
+    # template); the dense-histogram variant lives in router_counts.
+    n = gsz * k
+    flat_e = topi.reshape(g, n)
+    order = jnp.argsort(flat_e, axis=1, stable=True)         # (g, n)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    idx = jnp.arange(n, dtype=jnp.int32)[None, :]
+    is_new = jnp.concatenate(
+        [jnp.ones((g, 1), bool), sorted_e[:, 1:] != sorted_e[:, :-1]],
+        axis=1)
+    seg_start = jax.lax.cummax(jnp.where(is_new, idx, 0), axis=1)
+    slot_sorted = idx - seg_start                            # rank in segment
+    inv = jnp.argsort(order, axis=1)
+    slot = jnp.take_along_axis(slot_sorted, inv,
+                               axis=1).reshape(g, gsz, k)
+    keep = slot < cap
+
+    # scatter dispatch: tokens land at flat slot e*cap + slot; dropped
+    # tokens scatter out of bounds (mode="drop").  This never
+    # materializes the (t, e, cap) one-hot dispatch tensor -- the same
+    # "don't materialize the full intermediate" move as pattern tiling.
+    nslots = e * cap
+    dest = jnp.where(keep, topi * cap + slot, nslots)        # (g, t, k)
+
+    def scatter_group(x_g, dest_g):
+        buf = jnp.zeros((nslots, d), x_g.dtype)
+        for kk in range(k):
+            buf = buf.at[dest_g[:, kk]].add(x_g, mode="drop")
+        return buf
+
+    ex_in = jax.vmap(scatter_group)(xt, dest)                # (g, e*cap, d)
+    ex_in = ex_in.reshape(g, e, cap, d)
+    ex_in = hint(ex_in, "data", "model", None, None)
+    act = L.activation("silu" if cfg.activation == "swiglu"
+                       else cfg.activation)
+    h = jnp.einsum("gecd,edf->gecf", ex_in, p["we1"])
+    if cfg.activation == "swiglu":
+        h = act(h) * jnp.einsum("gecd,edf->gecf", ex_in, p["we3"])
+    else:
+        h = act(h)
+    ex_out = jnp.einsum("gecf,efd->gecd", h, p["we2"])
+    ex_out = hint(ex_out, "data", "model", None, None)
+
+    def gather_group(ex_g, dest_g, gates_g):
+        # dropped tokens gather zeros (fill mode)
+        got = jnp.take(ex_g.reshape(nslots, d), dest_g.reshape(-1),
+                       axis=0, mode="fill", fill_value=0)
+        got = got.reshape(gsz, k, d)
+        return jnp.einsum("tkd,tk->td", got, gates_g.astype(ex_g.dtype))
+
+    yt = jax.vmap(gather_group)(ex_out, dest, gates)         # (g, t, d)
+
+    if cfg.shared_expert:
+        hs = act(jnp.einsum("gtd,df->gtf", xt, p["ws1"]))
+        if cfg.activation == "swiglu":
+            hs = hs * jnp.einsum("gtd,df->gtf", xt, p["ws3"])
+        yt = yt + jnp.einsum("gtf,fd->gtd", hs, p["ws2"])
+
+    return yt.reshape(b, s, d).astype(x.dtype)
+
+
+def router_counts(p: Dict, x: jax.Array, cfg: ModelConfig,
+                  use_pallas: bool = False) -> jax.Array:
+    """Tokens-per-expert histogram -- the GroupByFold of MoE routing.
+
+    With ``use_pallas`` the validated CAM kernel computes it."""
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    top1 = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if use_pallas:
+        from repro.kernels.groupby_fold import groupby_fold
+        return groupby_fold(top1, jnp.ones((b * s,), jnp.float32),
+                            cfg.n_experts)
+    from repro.kernels import ref
+    return ref.groupby_fold(top1, jnp.ones((b * s,)), cfg.n_experts)

@@ -1,0 +1,87 @@
+"""Activation-sharding hints, decoupled from model code.
+
+Models call ``hint(x, "data", None, "model", None)``; by default this is
+the identity.  The launcher installs a mesh-aware constraint function
+that (a) checks divisibility of each dim against the mesh axis size and
+drops the axis if it does not divide (e.g. 14-head InternVL on a 16-way
+model axis), and (b) applies ``jax.lax.with_sharding_constraint``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_HINT_FN: Optional[Callable] = None
+
+
+def hint(x, *spec):
+    if _HINT_FN is None:
+        return x
+    return _HINT_FN(x, spec)
+
+
+def hint_first(x, specs):
+    """Apply the first spec whose sharded dims all divide the mesh axes
+    (e.g. prefer vocab-sharded logits, fall back to sequence-sharded
+    when the vocab is not divisible -- granite's 49155)."""
+    if _HINT_FN is None or _CHECK_FN is None:
+        return x
+    for spec in specs:
+        if _CHECK_FN(x, spec):
+            return _HINT_FN(x, spec)
+    return x
+
+
+_CHECK_FN: Optional[Callable] = None
+_MESH: Optional[Mesh] = None
+
+
+def model_axis_size() -> Optional[int]:
+    """Size of the ambient "model" axis (None outside use_mesh_hints)."""
+    return None if _MESH is None else int(_MESH.shape["model"])
+
+
+@contextlib.contextmanager
+def use_mesh_hints(mesh: Mesh):
+    """Install divisibility-checked sharding constraints for ``mesh``."""
+    global _HINT_FN, _CHECK_FN, _MESH
+
+    def fn(x, spec):
+        fixed = []
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                fixed.append(None)
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if dim < x.ndim and x.shape[dim] % size == 0:
+                fixed.append(ax)
+            else:
+                fixed.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*fixed)))
+
+    def check(x, spec):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if dim >= x.ndim or x.shape[dim] % size != 0:
+                return False
+        return True
+
+    global _CHECK_FN, _MESH
+    prev, prevc, prevm = _HINT_FN, _CHECK_FN, _MESH
+    _HINT_FN, _CHECK_FN, _MESH = fn, check, mesh
+    try:
+        yield
+    finally:
+        _HINT_FN, _CHECK_FN, _MESH = prev, prevc, prevm

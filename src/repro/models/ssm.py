@@ -1,0 +1,183 @@
+"""Mamba-2 (SSD) blocks, pure JAX with scan-over-layers.
+
+The SSD sequence computation is the strip-mined MultiFold of the paper
+(kernels/ssd_scan.py is the Pallas realization); this module provides
+the full-sequence chunked form used for training/prefill and the
+recurrent single-step form used for decode, plus the block plumbing
+(in-proj, causal conv, gating, out-proj) from arXiv:2405.21060.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .config import ModelConfig
+from .sharding import hint
+
+Params = Dict[str, Any]
+
+
+def block_param_shapes(cfg: ModelConfig, nl: int, prefix: str = ""
+                       ) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    d, di, ns, h = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads)
+    k = cfg.ssm_conv
+    p = prefix
+    return {
+        f"{p}ln": ((nl, d), "zeros"),
+        f"{p}in_proj": ((nl, d, 2 * di + 2 * ns + h), "dense"),
+        f"{p}conv_w": ((nl, k, di + 2 * ns), "dense"),
+        f"{p}A_log": ((nl, h), "zeros"),       # A = -exp(A_log)
+        f"{p}D": ((nl, h), "zeros"),
+        f"{p}dt_bias": ((nl, h), "zeros"),
+        f"{p}gate_ln": ((nl, di), "zeros"),
+        f"{p}out_proj": ((nl, di, d), "dense"),
+    }
+
+
+def _split_proj(z: jax.Array, cfg: ModelConfig):
+    di, ns, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    xz, rest = z[..., :2 * di], z[..., 2 * di:]
+    x_in, gate = xz[..., :di], xz[..., di:]
+    B = rest[..., :ns]
+    C = rest[..., ns:2 * ns]
+    dt = rest[..., 2 * ns:]
+    return x_in, gate, B, C, dt
+
+
+SSD_CHUNK = 64  # tile size: picked by the Fig-5c-style cost model sweep
+                # (EXPERIMENTS.md §Perf mamba2 iteration 1)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int = None):
+    if chunk is None:
+        chunk = SSD_CHUNK
+    """Full-sequence SSD, chunked (matmul) form -- jnp implementation of
+    the same algorithm as kernels/ssd_scan.py, used inside scan/jit.
+
+    x: (b, s, h, dh); dt: (b, s, h); A: (h,); B, C: (b, s, n).
+    Returns y (b, s, h, dh) and the final state (b, h, n, dh)."""
+    b, s, h, dh = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, dh)
+    xf = hint(xf, "data", None, None, "model", None)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    dtf = hint(dtf, "data", None, None, "model")
+    Bf = B.astype(jnp.float32).reshape(b, nc, chunk, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, chunk, n)
+
+    idx = jnp.arange(chunk)
+    lmask = idx[:, None] >= idx[None, :]
+
+    def chunk_body(hprev, inp):
+        # one strided iteration of the tiled MultiFold: all (L,L,h)
+        # decay intermediates live only inside this chunk (rematted).
+        # Heads shard over "model"; decay/score temps in bf16 with f32
+        # accumulation on the matmuls (the Pallas kernel's numerics).
+        xc, dtc, Bc, Cc = inp              # (b,L,h,dh) (b,L,h) (b,L,n) x2
+        sA = A[None, None, :] * dtc        # (b,L,h)
+        cum = jnp.cumsum(sA, axis=1)
+        total = cum[:, -1, :]              # (b,h)
+        Mdec = jnp.where(lmask[None, :, :, None],
+                         jnp.exp(cum[:, :, None, :] - cum[:, None, :, :]),
+                         0.0)              # (b,L,L,h)
+        Mdec = hint(Mdec, "data", None, None, "model")
+        scores = jnp.einsum("bln,bmn->blm", Cc, Bc,
+                            preferred_element_type=jnp.float32)
+        SM = (scores[..., None] * Mdec).astype(jnp.bfloat16)
+        xdt = (dtc[..., None] * xc).astype(jnp.bfloat16)   # (b,L,h,dh)
+        y_intra = jnp.einsum("blmh,bmhd->blhd", SM, xdt,
+                             preferred_element_type=jnp.float32)
+        y_state = jnp.einsum("bln,blh,bhnd->blhd", Cc,
+                             jnp.exp(cum), hprev)
+        w = jnp.exp(total[:, None, :] - cum) * dtc         # (b,L,h)
+        hnew = (hprev * jnp.exp(total)[:, :, None, None]
+                + jnp.einsum("bln,blh,blhd->bhnd", Bc, w, xc))
+        return hnew, (y_intra + y_state)
+
+    h0 = jnp.zeros((b, h, n, dh), jnp.float32)
+    hfin, y = jax.lax.scan(
+        jax.checkpoint(chunk_body), h0,
+        (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+         Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3)))
+    y = jnp.moveaxis(y, 0, 1).reshape(b, s, h, dh)
+    return y.astype(x.dtype), hfin
+
+
+def block_forward(slc: Params, x: jax.Array, cfg: ModelConfig,
+                  state: Optional[Dict] = None, prefix: str = ""):
+    """One Mamba-2 block.  state (decode): {"conv": (B,K-1,C),
+    "ssm": (B,H,N,dh)}; None for full-sequence training/prefill."""
+    p = {k[len(prefix):]: v for k, v in slc.items()
+         if k.startswith(prefix)} if prefix else slc
+    h = L.rms_norm(x, p["ln"])
+    z = jnp.einsum("bsd,dk->bsk", h, p["in_proj"])
+    x_in, gate, B, C, dt = _split_proj(z, cfg)
+    conv_in = jnp.concatenate([x_in, B, C], axis=-1)
+    conv_out, new_conv = L.causal_conv1d(
+        conv_in, p["conv_w"], None if state is None else state["conv"])
+    conv_out = jax.nn.silu(conv_out)
+    di, ns = cfg.d_inner, cfg.ssm_state
+    x_c = conv_out[..., :di]
+    B_c = conv_out[..., di:di + ns]
+    C_c = conv_out[..., di + ns:]
+
+    nh, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    xh = x_c.reshape(x.shape[0], x.shape[1], nh, dh)
+    dt_s = jax.nn.softplus(dt.astype(jnp.float32)
+                           + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if state is None:
+        y, hfin = ssd_chunked(xh, dt_s, A, B_c, C_c)
+    else:
+        # recurrent single step: s == 1
+        hprev = state["ssm"]
+        xt = xh[:, 0].astype(jnp.float32)                  # (b,h,dh)
+        dtt = dt_s[:, 0]                                   # (b,h)
+        Bt = B_c[:, 0].astype(jnp.float32)                 # (b,n)
+        Ct = C_c[:, 0].astype(jnp.float32)
+        decay = jnp.exp(A[None] * dtt)[..., None, None]
+        hfin = (hprev * decay
+                + dtt[..., None, None] * Bt[:, None, :, None]
+                * xt[:, :, None, :])
+        y = jnp.einsum("bn,bhnd->bhd", Ct, hfin)[:, None]  # (b,1,h,dh)
+        y = y.astype(x.dtype)
+
+    y = y + xh * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(x.shape[0], x.shape[1], di)
+    y = L.rms_norm(y, p["gate_ln"]) * jax.nn.silu(gate)
+    out = jnp.einsum("bsd,dk->bsk", y.astype(x.dtype), p["out_proj"])
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": hfin}
+    res = hint(x + out, "data", "model", None)  # sequence parallelism
+    return res, new_state
+
+
+def state_shapes(cfg: ModelConfig, batch: int) -> Dict[str, Tuple]:
+    return {
+        "conv": (cfg.n_layers, batch, cfg.ssm_conv - 1,
+                 cfg.d_inner + 2 * cfg.ssm_state),
+        "ssm": (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_state,
+                cfg.ssm_head_dim),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int) -> Dict:
+    shp = state_shapes(cfg, batch)
+    return {"conv": jnp.zeros(shp["conv"], jnp.dtype(cfg.dtype)),
+            "ssm": jnp.zeros(shp["ssm"], jnp.float32)}
+
+
+def state_specs(cfg: ModelConfig, batch: int) -> Dict:
+    shp = state_shapes(cfg, batch)
+    return {"conv": jax.ShapeDtypeStruct(shp["conv"], jnp.dtype(cfg.dtype)),
+            "ssm": jax.ShapeDtypeStruct(shp["ssm"], jnp.float32)}

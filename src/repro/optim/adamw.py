@@ -1,0 +1,123 @@
+"""AdamW with global-norm clipping, cosine schedule, and optional int8
+gradient compression with error feedback.
+
+Optimizer *state sharding* (ZeRO-1) is expressed at the launch layer:
+``repro.launch.shard_rules.opt_state_sharding`` additionally shards the
+fp32 m/v (and the error-feedback residual) over the data(+pod) axes, so
+each data-parallel rank keeps 1/N of the optimizer state -- on a
+512-chip mesh that is the difference between replicating 12 bytes/param
+and holding 12/32 bytes/param per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    ef: Optional[Any] = None  # error-feedback residual (compression)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    compress_grads: bool = False  # int8 + error feedback
+
+
+def init(params, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    ef = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+          if cfg.compress_grads else None)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros), ef)
+
+
+def state_specs(param_specs, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), param_specs)
+    ef = zeros if cfg.compress_grads else None
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), zeros,
+                      jax.tree.map(lambda x: x, zeros), ef)
+
+
+def schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _compress_with_feedback(grads, ef):
+    """int8 round-trip + error feedback.  On a real multi-pod deployment
+    this wraps the inter-pod (DCN) gradient all-reduce: 4x fewer bytes on
+    the slowest link; the residual keeps the estimator unbiased-ish."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq, g32 - deq
+
+    pairs = jax.tree.map(one, grads, ef)
+    deq = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda p: p[1], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_ef
+
+
+def update(grads, state: AdamWState, params,
+           cfg: AdamWConfig) -> Tuple[Any, AdamWState]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    new_ef = state.ef
+    if cfg.compress_grads:
+        grads, new_ef = _compress_with_feedback(grads, state.ef)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    lr = schedule(step, cfg)
+    b1c = 1 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    trip = jax.tree.map(upd, params, grads, state.m, state.v)
+    leaves = lambda i: jax.tree.map(lambda t: t[i], trip,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    return leaves(0), AdamWState(step, leaves(1), leaves(2), new_ef)

@@ -1,0 +1,2 @@
+"""User-facing pattern frontends (the paper benchmark suite)."""
+from .analytics import SUITE

@@ -1,0 +1,216 @@
+"""The paper's benchmark suite (Table 5) as PPL programs.
+
+Each builder returns ``(pattern, tile_sizes, make_inputs, reference)``:
+the untransformed pattern is the *base* configuration; ``tile_sizes``
+feed ``repro.core.tile`` for the tiled/metapipelined configurations.
+
+  outerprod   vector outer product          (map)
+  sumrows     matrix row summation          (map, reduce)
+  gemm        matrix multiplication         (map, reduce)
+  tpchq6      filtered weighted sum         (filter, reduce -- fused)
+  gda         class-wise scatter moments    (map, filter, reduce)
+  kmeans      k-means clustering step       (map, groupBy, reduce)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ir
+
+
+def _rng(seed, *shape):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+# ------------------------------------------------------------- outerprod
+def outerprod(m=256, n=256, bm=64, bn=64):
+    x = ir.Tensor("x", (m,))
+    y = ir.Tensor("y", (n,))
+    p = ir.Map(
+        domain=(m, n),
+        reads=(ir.Access(x, lambda i, j: (i,), (1,)),
+               ir.Access(y, lambda i, j: (j,), (1,))),
+        fn=lambda s, xe, ye: xe * ye, name="outer")
+    sizes = {"outer": (bm, bn)}
+
+    def make_inputs():
+        return {"x": _rng(0, m), "y": _rng(1, n)}
+
+    def reference(inp):
+        return np.outer(inp["x"], inp["y"])
+
+    return p, sizes, make_inputs, reference
+
+
+# --------------------------------------------------------------- sumrows
+def sumrows(m=256, n=256, b0=64, b1=64):
+    x = ir.Tensor("x", (m, n))
+    p = ir.MultiFold(
+        domain=(m, n), range_shape=(m,),
+        init=lambda: jnp.zeros((m,)),
+        reads=(ir.elem(x),),
+        out_index_map=lambda i, j: (i,), update_shape=(1,),
+        fn=lambda s, acc, e: acc + e,
+        combine=lambda a, b: a + b, name="sumrows")
+    sizes = {"sumrows": (b0, b1)}
+
+    def make_inputs():
+        return {"x": _rng(2, m, n)}
+
+    def reference(inp):
+        return inp["x"].sum(1)
+
+    return p, sizes, make_inputs, reference
+
+
+# ------------------------------------------------------------------ gemm
+def gemm(m=128, n=128, k=128, bm=64, bn=64, bk=64):
+    x = ir.Tensor("x", (m, k))
+    y = ir.Tensor("y", (k, n))
+    kfold = ir.MultiFold(
+        domain=(k,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(ir.Access(x, lambda i, j, kk: (i, kk), (1, 1)),
+               ir.Access(y, lambda i, j, kk: (kk, j), (1, 1))),
+        out_index_map=lambda i, j, kk: (), update_shape=(),
+        fn=lambda s, acc, xe, ye: acc + xe * ye,
+        combine=lambda a, b: a + b, name="gemm_k")
+    p = ir.Map(domain=(m, n), inner=kfold, name="gemm")
+    sizes = {"gemm": (bm, bn), "gemm_k": (bk,)}
+
+    def make_inputs():
+        return {"x": _rng(3, m, k), "y": _rng(4, k, n)}
+
+    def reference(inp):
+        return inp["x"] @ inp["y"]
+
+    return p, sizes, make_inputs, reference
+
+
+# ---------------------------------------------------------------- tpchq6
+def tpchq6(n=4096, b=512):
+    """SELECT sum(price * discount) WHERE lo <= qty < hi -- the filter
+    fuses into the fold (the FPGA FIFO disappears; DESIGN.md §2)."""
+    qty = ir.Tensor("qty", (n,))
+    price = ir.Tensor("price", (n,))
+    disc = ir.Tensor("disc", (n,))
+    lo, hi = 0.05, 0.95
+
+    def fn(s, acc, q, pr, dc):
+        pred = (q >= lo) & (q < hi)
+        return acc + jnp.where(pred, pr * dc, 0.0)
+
+    p = ir.MultiFold(
+        domain=(n,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(ir.elem(qty), ir.elem(price), ir.elem(disc)),
+        out_index_map=lambda i: (), update_shape=(),
+        fn=fn, combine=lambda a, b: a + b, name="q6")
+    sizes = {"q6": (b,)}
+
+    def make_inputs():
+        r = np.random.RandomState(5)
+        return {"qty": r.rand(n).astype(np.float32),
+                "price": r.rand(n).astype(np.float32),
+                "disc": r.rand(n).astype(np.float32)}
+
+    def reference(inp):
+        pred = (inp["qty"] >= lo) & (inp["qty"] < hi)
+        return np.sum(np.where(pred, inp["price"] * inp["disc"], 0.0))
+
+    return p, sizes, make_inputs, reference
+
+
+# ------------------------------------------------------------------- gda
+def gda(n=512, d=8, k=4, b0=64):
+    """Per-class scatter moments: sum_k [x_i ; x_i x_i^T] over class k --
+    map + groupBy + reduce (the paper's GDA core)."""
+    pts = ir.Tensor("pts", (n, d))
+    labels = ir.Tensor("labels", (n,))
+    ew = d + d * d
+
+    def fn(s, lab, row):
+        key = lab.astype(jnp.int32)
+        outer = jnp.outer(row, row).reshape(d * d)
+        return key, jnp.concatenate([row, outer])
+
+    p = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(ew,),
+        init=lambda: jnp.zeros((k, ew)),
+        reads=(ir.elem(labels),
+               ir.Access(pts, lambda i: (i, 0), (1, d))),
+        fn=fn, combine=lambda a, b: a + b, name="gda")
+    sizes = {"gda": (b0,)}
+
+    def make_inputs():
+        r = np.random.RandomState(6)
+        return {"pts": r.randn(n, d).astype(np.float32),
+                "labels": r.randint(0, k, n).astype(np.float32)}
+
+    def reference(inp):
+        out = np.zeros((k, ew), np.float32)
+        for i in range(n):
+            c = int(inp["labels"][i])
+            row = inp["pts"][i]
+            out[c, :d] += row
+            out[c, d:] += np.outer(row, row).reshape(-1)
+        return out
+
+    return p, sizes, make_inputs, reference
+
+
+# ---------------------------------------------------------------- kmeans
+def kmeans(n=256, k=8, d=16, b0=32, b1=4):
+    pts = ir.Tensor("points", (n, d))
+    cents = ir.Tensor("centroids", (k, d))
+
+    assign = ir.MultiFold(
+        domain=(k,), range_shape=(2,),
+        init=lambda: jnp.array([jnp.inf, -1.0]),
+        reads=(ir.Access(cents, lambda i, j: (j, 0), (1, d)),
+               ir.Access(pts, lambda i, j: (i, 0), (1, d))),
+        out_index_map=lambda i, j: (0,), update_shape=(2,),
+        fn=lambda s, acc, c_row, p_row: jnp.where(
+            jnp.sum((p_row - c_row) ** 2) < acc[..., 0],
+            jnp.stack([jnp.sum((p_row - c_row) ** 2),
+                       jnp.float32(s[-1])]), acc),
+        combine=lambda a, b: jnp.where(a[..., :1] <= b[..., :1], a, b),
+        name="assign")
+
+    def scatter_fn(s, pair, p_row):
+        return pair[1].astype(jnp.int32), jnp.concatenate(
+            [p_row, jnp.ones((1,))])
+
+    p = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(d + 1,),
+        init=lambda: jnp.zeros((k, d + 1)),
+        reads=(ir.Access(assign, lambda i: (0,), (2,)),
+               ir.Access(pts, lambda i: (i, 0), (1, d))),
+        fn=scatter_fn, combine=lambda a, b: a + b, name="scatter")
+    sizes = {"scatter": (b0,), "assign": (b1,)}
+
+    def make_inputs():
+        return {"points": _rng(7, n, d), "centroids": _rng(8, k, d)}
+
+    def reference(inp):
+        pts_, cents_ = inp["points"], inp["centroids"]
+        d2 = ((pts_[:, None] - cents_[None]) ** 2).sum(-1)
+        idx = d2.argmin(1)
+        out = np.zeros((k, d + 1), np.float32)
+        for i in range(n):
+            out[idx[i], :d] += pts_[i]
+            out[idx[i], d] += 1
+        return out
+
+    return p, sizes, make_inputs, reference
+
+
+SUITE = {
+    "outerprod": outerprod,
+    "sumrows": sumrows,
+    "gemm": gemm,
+    "tpchq6": tpchq6,
+    "gda": gda,
+    "kmeans": kmeans,
+}

@@ -1,0 +1,307 @@
+"""Transformation-rule tests: Table 1/2/3 and Fig. 5 of the paper.
+
+Every transformed program must (a) have the structure the paper's tables
+show and (b) compute the same value as the untransformed oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ir
+from repro.core.codegen_jax import execute
+from repro.core.fusion import lift_tile_stages
+from repro.core.interchange import interchange
+from repro.core.strip_mine import insert_tile_copies, strip_mine, tile
+
+jax.config.update("jax_enable_x64", False)
+
+
+# ---------------------------------------------------------------- helpers
+def mk_map_2x(d=32):
+    """Table 2 row 1: x.map{e => 2*e}."""
+    x = ir.Tensor("x", (d,))
+    return ir.Map(domain=(d,), reads=(ir.elem(x),),
+                  fn=lambda s, e: 2.0 * e, name="m")
+
+
+def mk_sumrows(m=12, n=16):
+    """Table 2 row 2: x.map{row => row.sum} as a MultiFold (m,n)->(m)."""
+    x = ir.Tensor("x", (m, n))
+    return ir.MultiFold(
+        domain=(m, n), range_shape=(m,), init=lambda: jnp.zeros((m,)),
+        reads=(ir.elem(x),),
+        out_index_map=lambda i, j: (i,), update_shape=(1,),
+        fn=lambda s, acc, e: acc + e,
+        combine=lambda a, b: a + b, name="sr")
+
+
+def mk_filter(d=40):
+    """Table 2 row 3: x.flatMap{e => if (e > 0) [e] else []}."""
+    x = ir.Tensor("x", (d,))
+
+    def fn(s, e):
+        return jnp.reshape(e, (1,)), (e > 0).astype(jnp.int32)
+
+    return ir.FlatMap(domain=(d,), max_per_iter=1, reads=(ir.elem(x),),
+                      fn=fn, name="f")
+
+
+def mk_hist(d=64, k=8):
+    """Table 2 row 4: histogram x.groupByFold(0){e => (e/10, 1)}{_+_}."""
+    x = ir.Tensor("x", (d,))
+
+    def fn(s, e):
+        key = jnp.clip(e.astype(jnp.int32), 0, k - 1)
+        return key, jnp.float32(1.0)
+
+    return ir.GroupByFold(domain=(d,), num_keys=k, init=lambda: jnp.zeros(k),
+                          reads=(ir.elem(x),), fn=fn,
+                          combine=lambda a, b: a + b, name="h")
+
+
+def mk_gemm(m=8, n=12, p=16):
+    """Table 3: matrix multiplication Map((m,n)){ fold(p) }."""
+    x = ir.Tensor("x", (m, p))
+    y = ir.Tensor("y", (p, n))
+    kfold = ir.MultiFold(
+        domain=(p,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(
+            ir.Access(x, lambda i, j, k: (i, k), (1, 1)),
+            ir.Access(y, lambda i, j, k: (k, j), (1, 1)),
+        ),
+        out_index_map=lambda i, j, k: (), update_shape=(),
+        fn=lambda s, acc, xe, ye: acc + xe * ye,
+        combine=lambda a, b: a + b, name="kfold")
+    return ir.Map(domain=(m, n), inner=kfold, name="gemm")
+
+
+def mk_kmeans(n=24, k=6, d=5):
+    """Fig. 4 k-means (fused): assignment fold + grouped scatter."""
+    points = ir.Tensor("points", (n, d))
+    cents = ir.Tensor("centroids", (k, d))
+
+    assign = ir.MultiFold(
+        domain=(k,), range_shape=(2,),
+        init=lambda: jnp.array([jnp.inf, -1.0]),
+        reads=(
+            ir.Access(cents, lambda i, j: (j, 0), (1, d)),
+            ir.Access(points, lambda i, j: (i, 0), (1, d)),
+        ),
+        out_index_map=lambda i, j: (0,), update_shape=(2,),
+        fn=lambda s, acc, c_row, p_row: jnp.where(
+            jnp.sum((p_row - c_row) ** 2) < acc[..., 0],
+            jnp.stack([jnp.sum((p_row - c_row) ** 2),
+                       jnp.float32(s[-1])]),
+            acc),
+        combine=lambda a, b: jnp.where(a[..., :1] <= b[..., :1], a, b),
+        name="assign")
+
+    def scatter_fn(s, pair, p_row):
+        key = pair[1].astype(jnp.int32)
+        val = jnp.concatenate([p_row, jnp.ones((1,))])
+        return key, val
+
+    scatter = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(d + 1,),
+        init=lambda: jnp.zeros((k, d + 1)),
+        reads=(
+            ir.Access(assign, lambda i: (0,), (2,)),
+            ir.Access(points, lambda i: (i, 0), (1, d)),
+        ),
+        fn=scatter_fn, combine=lambda a, b: a + b, name="scatter")
+    return scatter, points, cents
+
+
+def _rng(*shape):
+    return np.random.RandomState(sum(shape)).randn(*shape).astype(np.float32)
+
+
+# ----------------------------------------------------------- Table 2 rows
+class TestStripMine:
+    def test_map_rule_structure(self):
+        p = mk_map_2x(32)
+        t = strip_mine(p, {"m": (8,)})
+        # Map(d) -> MultiFold(d/b) strided write-once with inner Map(b)
+        assert isinstance(t, ir.MultiFold) and t.strided
+        assert t.domain == (4,) and t.combine is None
+        assert isinstance(t.inner, ir.Map) and t.inner.domain == (8,)
+
+    def test_map_rule_value(self):
+        p = mk_map_2x(32)
+        t = insert_tile_copies(strip_mine(p, {"m": (8,)}))
+        x = _rng(32)
+        np.testing.assert_allclose(execute(t, {"x": x}), 2 * x, rtol=1e-6)
+        # one tile copy of shape (8,) on the inner pattern's level
+        copies = [tc for q in ir.walk(t) for tc in q.loads]
+        assert len(copies) == 1 and copies[0].tile_shape == (8,)
+
+    def test_multifold_rule_structure(self):
+        p = mk_sumrows(12, 16)
+        t = strip_mine(p, {"sr": (4, 8)})
+        assert isinstance(t, ir.MultiFold) and t.strided
+        assert t.domain == (3, 2)
+        assert t.update_shape == (4,)  # touched region: row tile
+        assert isinstance(t.inner, ir.MultiFold)
+        assert t.inner.domain == (4, 8) and t.inner.range_shape == (4,)
+
+    def test_multifold_rule_value(self):
+        p = mk_sumrows(12, 16)
+        t = insert_tile_copies(strip_mine(p, {"sr": (4, 8)}))
+        x = _rng(12, 16)
+        np.testing.assert_allclose(execute(t, {"x": x}), x.sum(1), rtol=1e-5)
+        copies = [tc for q in ir.walk(t) for tc in q.loads]
+        assert len(copies) == 1 and copies[0].tile_shape == (4, 8)
+
+    def test_flatmap_rule(self):
+        p = mk_filter(40)
+        t = strip_mine(p, {"f": (8,)})
+        assert isinstance(t, ir.FlatMap) and t.strided and t.domain == (5,)
+        assert t.max_per_iter == 8
+        assert isinstance(t.inner, ir.FlatMap) and t.inner.domain == (8,)
+        x = _rng(40)
+        buf_t, cnt_t = execute(insert_tile_copies(t), {"x": x})
+        buf_o, cnt_o = execute(p, {"x": x})
+        ref = x[x > 0]
+        assert int(cnt_t) == int(cnt_o) == len(ref)
+        np.testing.assert_allclose(np.asarray(buf_t)[:len(ref)], ref)
+
+    def test_groupbyfold_rule(self):
+        p = mk_hist(64, 8)
+        t = strip_mine(p, {"h": (16,)})
+        assert isinstance(t, ir.GroupByFold) and t.strided
+        assert t.domain == (4,)
+        assert isinstance(t.inner, ir.GroupByFold) and t.inner.domain == (16,)
+        x = np.abs(_rng(64)) * 4
+        np.testing.assert_allclose(
+            execute(insert_tile_copies(t), {"x": x}),
+            execute(p, {"x": x}), rtol=1e-6)
+
+    def test_untiled_dim_means_full_extent(self):
+        p = mk_sumrows(12, 16)
+        t = strip_mine(p, {"sr": (4, None)})
+        assert t.domain == (3, 1) and t.inner.domain == (4, 16)
+
+
+# ------------------------------------------------------------ Table 3 gemm
+class TestGemm:
+    def test_strip_mined_structure(self):
+        g = mk_gemm(8, 12, 16)
+        t = strip_mine(g, {"gemm": (4, 6), "kfold": (8,)})
+        # outer write-once grid, inner Map tile, per-elem strided fold
+        assert isinstance(t, ir.MultiFold) and t.strided and t.combine is None
+        assert t.domain == (2, 2)
+        assert isinstance(t.inner, ir.Map) and t.inner.domain == (4, 6)
+        f = t.inner.inner
+        assert isinstance(f, ir.MultiFold) and f.strided and f.domain == (2,)
+        assert isinstance(f.inner, ir.MultiFold) and f.inner.domain == (8,)
+
+    def test_interchanged_structure(self):
+        g = mk_gemm(8, 12, 16)
+        t = interchange(strip_mine(g, {"gemm": (4, 6), "kfold": (8,)}))
+        # Table 3 right: grid -> strided fold over kk -> Map tile -> fold(b2)
+        assert isinstance(t, ir.MultiFold) and t.strided and t.combine is None
+        f = t.inner
+        assert isinstance(f, ir.MultiFold) and f.strided and f.domain == (2,)
+        assert f.range_shape == (4, 6)  # accumulates the whole output tile
+        m = f.inner
+        assert isinstance(m, ir.Map) and m.domain == (4, 6)
+        assert isinstance(m.inner, ir.MultiFold) and m.inner.domain == (8,)
+
+    def test_tile_copies_match_paper(self):
+        g = mk_gemm(8, 12, 16)
+        t = tile(g, {"gemm": (4, 6), "kfold": (8,)})
+        # xTile (b0,b2) and yTile (b2,b1) attached at the kk fold level
+        f = t.inner
+        shapes = sorted(tc.tile_shape for tc in f.loads)
+        assert shapes == [(4, 8), (8, 6)]
+
+    def test_value_all_stages(self):
+        g = mk_gemm(8, 12, 16)
+        x, y = _rng(8, 16), _rng(16, 12)
+        ref = x @ y
+        np.testing.assert_allclose(execute(g, {"x": x, "y": y}), ref,
+                                   rtol=1e-4)
+        sm = strip_mine(g, {"gemm": (4, 6), "kfold": (8,)})
+        np.testing.assert_allclose(execute(sm, {"x": x, "y": y}), ref,
+                                   rtol=1e-4)
+        full = tile(g, {"gemm": (4, 6), "kfold": (8,)})
+        np.testing.assert_allclose(execute(full, {"x": x, "y": y}), ref,
+                                   rtol=1e-4)
+
+
+# ------------------------------------------------------------- Fig 5 kmeans
+class TestKmeans:
+    def _ref(self, pts, cents):
+        d2 = ((pts[:, None, :] - cents[None, :, :]) ** 2).sum(-1)
+        idx = d2.argmin(1)
+        k, d = cents.shape
+        sums = np.zeros((k, d + 1), np.float32)
+        for i, p in enumerate(pts):
+            sums[idx[i], :d] += p
+            sums[idx[i], d] += 1
+        return sums
+
+    def test_fused_oracle(self):
+        scatter, *_ = mk_kmeans(24, 6, 5)
+        pts, cents = _rng(24, 5), _rng(6, 5)
+        np.testing.assert_allclose(
+            execute(scatter, {"points": pts, "centroids": cents}),
+            self._ref(pts, cents), rtol=1e-4)
+
+    def test_tiled_structure_fig5b(self):
+        scatter, *_ = mk_kmeans(24, 6, 5)
+        t = tile(scatter, {"scatter": (8,), "assign": (3,)})
+        # outer GroupByFold grid over n/b0
+        assert isinstance(t, ir.GroupByFold) and t.strided
+        assert t.domain == (3,)
+        # stage lifted at the outer level: interchanged assign fold
+        stages = [tc for tc in t.loads if isinstance(tc.src, ir.Pattern)]
+        assert len(stages) == 1
+        st = stages[0].src
+        # Fig 5b: multiFold(k/b1)(b0-pairs){ map(b0){ fold(b1) } }
+        assert isinstance(st, ir.MultiFold) and st.strided
+        assert st.domain == (2,) and st.range_shape == (8, 2)
+        assert isinstance(st.inner, ir.Map) and st.inner.domain == (8,)
+        # tensor tile copies: pt1Tile (b0,d) at outer; pt2Tile (b1,d) at stage
+        tensor_copies = {tc.tile_shape
+                         for q in ir.walk(t) for tc in q.loads
+                         if isinstance(tc.src, ir.Tensor)}
+        assert (8, 5) in tensor_copies and (3, 5) in tensor_copies
+
+    def test_points_copy_cse(self):
+        """The points tile is read by both the assign stage and the
+        scatter -- CSE must merge them into a single copy (paper: 'CSE
+        ... to eliminate duplicate copies')."""
+        scatter, *_ = mk_kmeans(24, 6, 5)
+        t = tile(scatter, {"scatter": (8,), "assign": (3,)})
+        pts_copies = [tc for q in ir.walk(t) for tc in q.loads
+                      if isinstance(tc.src, ir.Tensor)
+                      and tc.src.name == "points"]
+        assert len(pts_copies) == 1
+
+    def test_tiled_value(self):
+        scatter, *_ = mk_kmeans(24, 6, 5)
+        pts, cents = _rng(24, 5), _rng(6, 5)
+        t = tile(scatter, {"scatter": (8,), "assign": (3,)})
+        np.testing.assert_allclose(
+            execute(t, {"points": pts, "centroids": cents}),
+            self._ref(pts, cents), rtol=1e-4)
+
+    def test_strip_mine_only_value(self):
+        scatter, *_ = mk_kmeans(24, 6, 5)
+        pts, cents = _rng(24, 5), _rng(6, 5)
+        sm = insert_tile_copies(strip_mine(
+            scatter, {"scatter": (8,), "assign": (3,)}))
+        np.testing.assert_allclose(
+            execute(sm, {"points": pts, "centroids": cents}),
+            self._ref(pts, cents), rtol=1e-4)
+
+
+# ----------------------------------------------------- parallel partials
+def test_multifold_parallel_partials_associative():
+    p = mk_sumrows(12, 16)
+    x = _rng(12, 16)
+    seq = execute(p, {"x": x})
+    par = execute(p, {"x": x}, parallel_partials=4)
+    np.testing.assert_allclose(seq, par, rtol=1e-5)

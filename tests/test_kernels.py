@@ -1,0 +1,114 @@
+"""Per-kernel shape/dtype sweeps vs the ref.py oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.filter_reduce import filter_reduce
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.groupby_fold import groupby_fold
+from repro.kernels.matmul import matmul
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _r(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ------------------------------------------------------------- matmul
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 128, 128, 128, 128, 128),
+    (256, 128, 64, 128, 64, 64),
+    (64, 256, 128, 32, 128, 128),
+    (8, 16, 8, 8, 8, 16),
+])
+def test_matmul_shapes(m, k, n, bm, bn, bk):
+    x, y = _r(0, m, k), _r(1, k, n)
+    out = matmul(x, y, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(out, ref.matmul(x, y), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _r(2, 64, 64).astype(dtype)
+    y = _r(3, 64, 64).astype(dtype)
+    out = matmul(x, y, block_m=32, block_n=32, block_k=32)
+    rtol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.matmul(x, y), rtol=rtol, atol=rtol)
+
+
+# ----------------------------------------------------- flash attention
+@pytest.mark.parametrize("b,hq,hkv,sq,sk,d,bq,bk", [
+    (1, 4, 4, 128, 128, 64, 64, 64),    # MHA
+    (2, 8, 2, 128, 128, 32, 128, 64),   # GQA 4:1
+    (1, 4, 1, 64, 64, 32, 32, 32),      # MQA
+    (1, 2, 2, 64, 256, 32, 64, 64),     # decode-ish: kv longer than q
+])
+def test_flash_attention_causal(b, hq, hkv, sq, sk, d, bq, bk):
+    q, k, v = _r(0, b, hq, sq, d), _r(1, b, hkv, sk, d), _r(2, b, hkv, sk, d)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_sliding_window():
+    q, k, v = _r(0, 1, 4, 256, 32), _r(1, 1, 2, 256, 32), _r(2, 1, 2, 256, 32)
+    out = flash_attention(q, k, v, causal=True, window=64,
+                          block_q=64, block_k=64)
+    want = ref.attention(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = _r(3, 1, 2, 64, 32), _r(4, 1, 2, 64, 32), _r(5, 1, 2, 64, 32)
+    out = flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    want = ref.attention(q, k, v, causal=False)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------ ssd scan
+@pytest.mark.parametrize("b,s,h,dh,n,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 32, 1, 8, 4, 32),   # single chunk
+])
+def test_ssd_scan(b, s, h, dh, n, chunk):
+    x = _r(0, b, s, h, dh)
+    dt = jax.nn.softplus(_r(1, b, s, h)) * 0.1
+    A = -jax.nn.softplus(_r(2, h)) - 0.1
+    B = _r(3, b, s, n)
+    C = _r(4, b, s, n)
+    out = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    want = ref.ssd_scan(x, dt, A, B, C)
+    np.testing.assert_allclose(out, want, rtol=2e-4, atol=2e-4)
+
+
+# -------------------------------------------------------- groupby fold
+@pytest.mark.parametrize("t,k,ew,bt", [(512, 16, 4, 128), (256, 8, 1, 256),
+                                       (128, 64, 8, 32)])
+def test_groupby_fold(t, k, ew, bt):
+    keys = jax.random.randint(jax.random.PRNGKey(0), (t,), 0, k)
+    vals = _r(1, t, ew)
+    out = groupby_fold(keys, vals, k, block_t=bt)
+    np.testing.assert_allclose(out, ref.groupby_fold(keys, vals, k),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_groupby_fold_1d_values():
+    keys = jax.random.randint(jax.random.PRNGKey(2), (256,), 0, 8)
+    vals = _r(3, 256)
+    out = groupby_fold(keys, vals, 8)
+    np.testing.assert_allclose(out, ref.groupby_fold(keys, vals, 8),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- filter reduce
+@pytest.mark.parametrize("t,bt", [(2048, 512), (1024, 1024), (512, 128)])
+def test_filter_reduce(t, bt):
+    x = _r(0, t)
+    w = _r(1, t)
+    out = filter_reduce(x, w, -0.5, 0.8, block_t=bt)
+    want = ref.filter_reduce(x, jnp.float32(-0.5), jnp.float32(0.8), w)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
