@@ -14,9 +14,15 @@ Prints ``name,us_per_call,derived`` CSV:
   kernels/*   Pallas kernel interpret-mode sanity timings vs oracle.
   roofline/*  per-(arch x shape) dominant-term summary from the latest
               dry-run results, if present.
+  autotile/*  (--autotile) per-benchmark comparison of hand-picked vs
+              DSE-tuned tile sizes: wall time of the lowered program and
+              the cost model's traffic/modeled-seconds accounting.
+
+``--only fig5c,table2`` restricts to the named sections (CI smoke).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -190,13 +196,71 @@ def roofline():
                  f";frac={a['roofline_fraction']:.3f}")
 
 
-def main() -> None:
-    fig7()
-    fig5c()
-    table2()
-    table3()
-    kernels()
-    roofline()
+def autotile():
+    """Tuned-vs-hand-picked tile sizes for every suite benchmark: wall
+    time of the lowered program plus the cost model's accounting (the
+    quantity the DSE argmin optimizes)."""
+    from repro.core.dse import explore, price
+
+    for name, builder in SUITE.items():
+        p, hand_sizes, make_inputs, reference = builder()
+        inputs = {k: jnp.asarray(v) for k, v in make_inputs().items()}
+        ref = np.asarray(reference(inputs))
+        plan = explore(p)
+        hand = price(p, hand_sizes)
+        variants = (("hand", hand_sizes,
+                     hand.traffic_words if hand else "over-vmem"),
+                    ("tuned", plan.sizes, plan.traffic_words))
+        for label, sizes, words in variants:
+            prog = tile(p, sizes)
+            f = jax.jit(lambda **kw: execute(prog, kw))
+            out = f(**inputs)
+            if isinstance(out, tuple):
+                out = out[0]
+            np.testing.assert_allclose(np.asarray(out), ref,
+                                       rtol=2e-3, atol=2e-3)
+            us = _time(lambda: f(**inputs))
+            emit(f"autotile/{name}/{label}", us,
+                 f"traffic_words={words};sizes={dict(sizes)}")
+        ok = hand is None or plan.traffic_words <= hand.traffic_words
+        emit(f"autotile/{name}/tuned_le_hand", 0,
+             "PASS" if ok else "FAIL")
+
+
+SECTIONS = {
+    "fig7": fig7,
+    "fig5c": fig5c,
+    "table2": table2,
+    "table3": table3,
+    "kernels": kernels,
+    "roofline": roofline,
+    "autotile": autotile,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--autotile", action="store_true",
+                    help="also run the autotile section (DSE-tuned vs "
+                         "hand-picked tile sizes)")
+    ap.add_argument("--only", default=None, metavar="SECTIONS",
+                    help="comma-separated subset of sections to run: "
+                         + ",".join(SECTIONS))
+    args = ap.parse_args(argv)
+
+    if args.only:
+        names = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in names if s not in SECTIONS]
+        if unknown:
+            ap.error(f"unknown sections {unknown}; choose from "
+                     f"{list(SECTIONS)}")
+    else:
+        names = [s for s in SECTIONS if s != "autotile"]
+    if args.autotile and "autotile" not in names:
+        names.append("autotile")
+
+    for s in names:
+        SECTIONS[s]()
     print(f"\n{len(ROWS)} benchmark rows emitted")
 
 

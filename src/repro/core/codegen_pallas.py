@@ -368,3 +368,25 @@ def lower(p: ir.Pattern) -> Callable:
     raise NotImplementedError(
         f"no hardware template for {type(p).__name__} (strided="
         f"{p.strided}); supported: tiled Map/GEMM/GroupByFold/FlatMap")
+
+
+def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
+               cache=None) -> Callable:
+    """Tile an *untiled* pattern with a DSE-chosen ``TilePlan`` and lower
+    it (paper §4 automated tile-size selection feeding §5 codegen).
+
+    ``plan=None`` runs ``core.dse.explore`` (with its persistent tuning
+    cache); pass an explicit ``TilePlan`` to reuse a prior exploration.
+    The selected plan is exposed on the returned callable as
+    ``.tile_plan``.
+    """
+    from .cost import VMEM_BYTES
+    from .dse import explore
+    from .strip_mine import tile
+
+    budget = VMEM_BYTES if vmem_budget is None else vmem_budget
+    if plan is None:
+        plan = explore(p, vmem_budget=budget, cache=cache)
+    call = lower(tile(p, plan.sizes, vmem_budget_words=budget // 4))
+    call.tile_plan = plan
+    return call

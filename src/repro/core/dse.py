@@ -1,0 +1,552 @@
+"""Pattern-generic tile-size design space exploration (paper §4).
+
+    "In future work, tile sizes for all pattern dimensions will instead
+     be determined by the compiler through automated tile size selection
+     using modeling and design space exploration."  (paper, §4)
+
+This module is that subsystem, generalized beyond the GEMM template
+(``repro.kernels.autotile`` is now a thin front-end over it).  Given any
+*untiled* pattern program it:
+
+  1. enumerates MXU/lane-aligned tile-size candidates for every named
+     pattern domain (``tile_space``);
+  2. applies the full tiling pipeline (``core.strip_mine.tile``) to each
+     candidate and prices the tiled IR with the analytic cost model:
+     main-memory traffic (``core.cost.traffic``) plus metapipeline
+     overlap (``core.scheduling`` -> ``core.cost.metapipeline_time``);
+  3. prunes candidates whose ``core.memory.plan_memory`` footprint
+     exceeds the VMEM budget (the paper's BRAM-capacity compile check);
+  4. returns the argmin as a ``TilePlan``, memoized in a persistent
+     on-disk tuning cache keyed by (pattern signature, input tensor
+     shapes, dtype, budget).
+
+The objective is lexicographic: fewest main-memory words first (the
+quantity Fig. 5c/7 optimize), then modeled metapipelined seconds, then
+*largest* on-chip footprint (prefer reuse when traffic ties).
+
+The bottom half of the module is a library of *proxy programs*: small
+PPL models of each Pallas kernel's loop structure (flash attention, the
+SSD chunked scan, filter+reduce, GroupByFold).  The kernels' ``auto_tile``
+paths build these proxies and ask ``explore`` for block sizes, so every
+kernel shares one exploration engine and one tuning cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+import os
+import tempfile
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from . import ir
+from .cost import HBM_BYTES_PER_S, VMEM_BYTES, traffic
+from .memory import plan_memory
+from .scheduling import build_schedule, model_speedup
+from .strip_mine import insert_tile_copies, strip_mine, tile
+
+MXU = 128     # MXU systolic array edge / lane count
+SUBLANE = 8   # VPU sublane count (fp32 min tile is 8 x 128)
+
+# cap on priced candidates per exploration; axes are thinned (keeping
+# their endpoints) until the cross product fits.  Recorded on the
+# returned TilePlan as ``thinned=True``.
+MAX_POINTS = 4096
+
+
+# --------------------------------------------------------------------------
+# Tile plans
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """DSE result: per-pattern tile sizes plus the model's accounting."""
+
+    sizes: Dict[str, Tuple[int, ...]]
+    traffic_words: int
+    vmem_bytes: int
+    modeled_seconds: float
+    explored: int = 0        # candidates priced
+    pruned: int = 0          # candidates rejected by the VMEM budget
+    thinned: bool = False    # search space was capped (MAX_POINTS)
+    cached: bool = False     # served from the tuning cache
+
+    def to_json(self) -> Dict:
+        return {
+            "sizes": {k: list(v) for k, v in self.sizes.items()},
+            "traffic_words": int(self.traffic_words),
+            "vmem_bytes": int(self.vmem_bytes),
+            "modeled_seconds": float(self.modeled_seconds),
+            "explored": int(self.explored),
+            "pruned": int(self.pruned),
+            "thinned": bool(self.thinned),
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "TilePlan":
+        return cls(sizes={k: tuple(v) for k, v in d["sizes"].items()},
+                   traffic_words=int(d["traffic_words"]),
+                   vmem_bytes=int(d["vmem_bytes"]),
+                   modeled_seconds=float(d["modeled_seconds"]),
+                   explored=int(d.get("explored", 0)),
+                   pruned=int(d.get("pruned", 0)),
+                   thinned=bool(d.get("thinned", False)),
+                   cached=True)
+
+
+# --------------------------------------------------------------------------
+# Persistent tuning cache
+# --------------------------------------------------------------------------
+
+
+def default_cache_path() -> str:
+    env = os.environ.get("REPRO_DSE_CACHE")
+    if env:
+        return env
+    base = os.environ.get("XDG_CACHE_HOME",
+                          os.path.join(os.path.expanduser("~"), ".cache"))
+    return os.path.join(base, "repro", "dse_cache.json")
+
+
+class TuningCache:
+    """On-disk key -> TilePlan store (JSON; atomic rewrite on put).
+
+    A corrupt or unreadable file is treated as empty -- the cache is an
+    accelerator, never a correctness dependency.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or default_cache_path()
+        self._data: Optional[Dict[str, Dict]] = None
+
+    def _load(self) -> Dict[str, Dict]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+                if not isinstance(self._data, dict):
+                    self._data = {}
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def get(self, key: str) -> Optional[TilePlan]:
+        d = self._load().get(key)
+        if d is None:
+            return None
+        try:
+            return TilePlan.from_json(d)
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def put(self, key: str, plan: TilePlan) -> None:
+        data = self._load()
+        data[key] = plan.to_json()
+        try:
+            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path) or ".",
+                                       prefix=".dse_cache.")
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=0, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass  # read-only FS etc.: keep the in-memory copy only
+
+    def clear(self) -> None:
+        self._data = {}
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass
+
+
+def _reads_sig(p: ir.Pattern, enc: int = 0) -> Tuple:
+    """Access descriptors in pre-order: (src, window, affine, index map).
+
+    ``ir.signature`` covers domains/nesting/loads but not reads, and an
+    untiled program carries all its shape information in reads -- two
+    programs differing only in an access window must not share a key.
+    Index maps are probed best-effort (non-affine maps hash as opaque).
+    """
+    from .affine import AffineMap
+
+    out: List = []
+    stack = enc + len(p.domain)
+    for a in p.accesses:
+        src = a.src.name if isinstance(a.src, ir.Tensor) \
+            else type(a.src).__name__
+        if isinstance(a.index_map, AffineMap):
+            m: object = (a.index_map.base, a.index_map.mat)
+        else:
+            try:
+                amap = AffineMap.probe(a.index_map, stack)
+                m = (amap.base, amap.mat)
+            except Exception:
+                m = "nonaffine"
+        out.append((src, tuple(a.window), a.affine, m))
+        if isinstance(a.src, ir.Pattern):
+            out.append(_reads_sig(a.src, stack))
+    if p.inner is not None:
+        out.append(_reads_sig(p.inner, stack))
+    return tuple(out)
+
+
+def pattern_key(p: ir.Pattern, *,
+                vmem_budget: int = VMEM_BYTES,
+                align: int = MXU,
+                extra: Tuple = ()) -> str:
+    """Tuning-cache key: structural signature + access descriptors +
+    input shapes/dtypes + exploration constraints.
+
+    Any change to the pattern tree (domains, nesting, reads, tensor
+    shapes or dtypes) or to the constraints changes the key, so cached
+    plans invalidate automatically on shape change.
+    """
+    inputs = tuple((t.name, tuple(t.shape), t.dtype)
+                   for t in ir.inputs_of(p))
+    raw = repr((ir.signature(p), _reads_sig(p), inputs,
+                int(vmem_budget), int(align), tuple(extra)))
+    return hashlib.sha256(raw.encode()).hexdigest()[:32]
+
+
+# --------------------------------------------------------------------------
+# Candidate enumeration
+# --------------------------------------------------------------------------
+
+
+def axis_candidates(extent: int, align: int = MXU) -> List[int]:
+    """Power-of-two multiples of ``min(align, extent)`` dividing ``extent``
+    (the MXU/lane-aligned ladder), falling back to the full extent."""
+    out = []
+    c = min(align, extent)
+    while c <= extent:
+        if extent % c == 0:
+            out.append(c)
+        c *= 2
+    return out or [extent]
+
+
+def tile_space(p: ir.Pattern, *, align: int = MXU
+               ) -> Dict[str, List[Tuple[int, ...]]]:
+    """Per-named-pattern candidate tile tuples for every (untiled) domain.
+
+    The full design space is the cross product over patterns; patterns
+    that already carry a strided domain are left alone.
+    """
+    space: Dict[str, List[Tuple[int, ...]]] = {}
+    for q in ir.walk(p):
+        if q.strided or not q.domain or q.name in space:
+            continue
+        per_dim = [axis_candidates(d, align) for d in q.domain]
+        space[q.name] = [tuple(c) for c in itertools.product(*per_dim)]
+    return space
+
+
+def _thin(space: Dict[str, List[Tuple[int, ...]]],
+          max_points: int) -> Tuple[Dict[str, List[Tuple[int, ...]]], bool]:
+    """Halve the densest axis list (keeping endpoints) until the cross
+    product is within budget.  Returns (space, was_thinned)."""
+    def total(s):
+        t = 1
+        for v in s.values():
+            t *= len(v)
+        return t
+
+    thinned = False
+    space = {k: list(v) for k, v in space.items()}
+    while total(space) > max_points:
+        name = max(space, key=lambda k: len(space[k]))
+        v = space[name]
+        if len(v) <= 2:
+            break
+        space[name] = v[::2] if v[-1] == v[::2][-1] else v[::2] + [v[-1]]
+        thinned = True
+    return space, thinned
+
+
+# --------------------------------------------------------------------------
+# Pricing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Priced:
+    sizes: Dict[str, Tuple[int, ...]]
+    traffic_words: int
+    vmem_bytes: int
+    modeled_seconds: float
+
+
+def _tile_ir(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]],
+             vmem_budget_words: int) -> ir.Pattern:
+    try:
+        return tile(p, sizes, vmem_budget_words=vmem_budget_words)
+    except Exception:
+        # interchange/lift may not apply to every proxy shape; the
+        # strip-mine + copy-insertion core always does.
+        return insert_tile_copies(strip_mine(p, sizes),
+                                  vmem_budget_words=vmem_budget_words)
+
+
+def price(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
+          vmem_budget: int = VMEM_BYTES,
+          bytes_per_word: int = 4) -> Optional[Priced]:
+    """Tile ``p`` with ``sizes`` and price it; None if it busts VMEM.
+
+    Modeled seconds = HBM stream time of the tiled IR's main-memory
+    reads, divided by the metapipeline overlap factor of its schedule
+    (``metapipeline_time`` steady state vs. sequential).
+    """
+    t = _tile_ir(p, sizes, vmem_budget // bytes_per_word)
+    plan = plan_memory(t, vmem_budget_bytes=vmem_budget)
+    if not plan.fits:
+        return None
+    # an affine tensor read left in place means its tile copy would not
+    # fit on-chip (insert_tile_copies' streaming fallback): over-VMEM
+    for q in ir.walk(t):
+        for a in q.accesses:
+            if isinstance(a.src, ir.Tensor) and a.affine:
+                return None
+    tr = traffic(t)
+    seconds = tr.total_reads * bytes_per_word / HBM_BYTES_PER_S
+    mp = build_schedule(t, vmem_budget // bytes_per_word)
+    if mp is not None:
+        body_words = sum(s.words for s in mp.stages if s.kind == "body")
+        _, _, overlap = model_speedup(mp, flops_per_body=body_words * 100.0)
+        seconds /= max(overlap, 1.0)
+    return Priced(dict(sizes), tr.total_reads, plan.total_bytes, seconds)
+
+
+def _better(a: Priced, b: Optional[Priced]) -> bool:
+    """Lexicographic: traffic, then modeled time, then prefer reuse."""
+    if b is None:
+        return True
+    ka = (a.traffic_words, a.modeled_seconds, -a.vmem_bytes)
+    kb = (b.traffic_words, b.modeled_seconds, -b.vmem_bytes)
+    return ka < kb
+
+
+# --------------------------------------------------------------------------
+# Exploration
+# --------------------------------------------------------------------------
+
+
+def explore(p: ir.Pattern, *,
+            vmem_budget: int = VMEM_BYTES,
+            align: int = MXU,
+            space: Optional[Dict[str, List[Tuple[int, ...]]]] = None,
+            cache: Union[None, bool, str, TuningCache] = None,
+            max_points: int = MAX_POINTS) -> TilePlan:
+    """Design-space exploration over tile sizes for any pattern program.
+
+    ``p`` is the *untiled* program.  ``cache`` selects the tuning cache:
+    ``None`` -> the default on-disk cache, a path or ``TuningCache`` ->
+    that cache, ``False`` -> no caching.  Raises ``ValueError`` when no
+    candidate fits the VMEM budget.
+    """
+    tc: Optional[TuningCache]
+    if cache is False:
+        tc = None
+    elif cache is None:
+        tc = TuningCache()
+    elif isinstance(cache, str):
+        tc = TuningCache(cache)
+    else:
+        tc = cache
+
+    if space is None:
+        space = tile_space(p, align=align)
+    space, thinned = _thin(space, max_points)
+    names = sorted(space)
+
+    # the key covers the *resolved* candidate space: a caller-restricted
+    # or thinned exploration must not share cache entries with a full one
+    space_sig = tuple((n, tuple(space[n])) for n in names)
+    key = pattern_key(p, vmem_budget=vmem_budget, align=align,
+                      extra=space_sig)
+    if tc is not None:
+        hit = tc.get(key)
+        if hit is not None:
+            return hit
+
+    best: Optional[Priced] = None
+    explored = pruned = 0
+    for combo in itertools.product(*(space[n] for n in names)):
+        sizes = dict(zip(names, combo))
+        priced = price(p, sizes, vmem_budget=vmem_budget)
+        explored += 1
+        if priced is None:
+            pruned += 1
+            continue
+        if _better(priced, best):
+            best = priced
+    if best is None:
+        raise ValueError(
+            f"DSE: no tile candidate fits VMEM budget {vmem_budget} B "
+            f"({explored} candidates over {names})")
+
+    plan = TilePlan(sizes={k: tuple(v) for k, v in best.sizes.items()},
+                    traffic_words=best.traffic_words,
+                    vmem_bytes=best.vmem_bytes,
+                    modeled_seconds=best.modeled_seconds,
+                    explored=explored, pruned=pruned, thinned=thinned)
+    if tc is not None:
+        tc.put(key, plan)
+    return plan
+
+
+# --------------------------------------------------------------------------
+# Proxy programs: PPL models of the Pallas kernels' loop structure.
+# Bodies are only analyzed (traffic / memory / schedule), never executed,
+# but are kept runnable for the codegen_jax oracle where cheap to do so.
+# --------------------------------------------------------------------------
+
+
+def attention_program(sq: int, sk: int, d: int) -> ir.Pattern:
+    """Flash attention as Map(queries){ MultiFold(keys) } -- the online-
+    softmax fold over keys nested in the query map (DESIGN.md §4).
+
+    Tileable domains: ``fa_q`` (query block) and ``fa_kv`` (kv block).
+    """
+    import jax.numpy as jnp
+
+    q = ir.Tensor("q", (sq, d))
+    k = ir.Tensor("k", (sk, d))
+    v = ir.Tensor("v", (sk, d))
+    kv = ir.MultiFold(
+        domain=(sk,), range_shape=(d,),
+        init=lambda: jnp.zeros((d,)),
+        reads=(ir.Access(q, lambda i, kk: (i, 0), (1, d)),
+               ir.Access(k, lambda i, kk: (kk, 0), (1, d)),
+               ir.Access(v, lambda i, kk: (kk, 0), (1, d))),
+        out_index_map=lambda i, kk: (0,), update_shape=(d,),
+        fn=lambda s, acc, qe, ke, ve: acc + jnp.sum(qe * ke) * ve,
+        combine=lambda a, b: a + b, name="fa_kv")
+    return ir.Map(domain=(sq,), elem_shape=(d,), inner=kv, name="fa_q")
+
+
+def scan_program(seq: int, n: int, dh: int) -> ir.Pattern:
+    """The SSD chunked scan's sequence fold: per step read an x row, a
+    dt scalar and B/C rows, update the carried (n, dh) state.
+
+    Tileable domain: ``ssd`` (the chunk length).
+    """
+    import jax.numpy as jnp
+
+    x = ir.Tensor("x", (seq, dh))
+    dt = ir.Tensor("dt", (seq,))
+    B = ir.Tensor("B", (seq, n))
+    C = ir.Tensor("C", (seq, n))
+    return ir.MultiFold(
+        domain=(seq,), range_shape=(n, dh),
+        init=lambda: jnp.zeros((n, dh)),
+        reads=(ir.Access(x, lambda i: (i, 0), (1, dh)),
+               ir.elem(dt),
+               ir.Access(B, lambda i: (i, 0), (1, n)),
+               ir.Access(C, lambda i: (i, 0), (1, n))),
+        out_index_map=lambda i: (0, 0), update_shape=(n, dh),
+        fn=lambda s, acc, xe, dte, be, ce: acc + jnp.outer(be, xe) * dte,
+        combine=lambda a, b: a + b, name="ssd")
+
+
+def filter_reduce_program(t: int) -> ir.Pattern:
+    """TPC-H Q6 shape: fused filter + weighted-sum fold over one stream
+    (tileable domain: ``fr``)."""
+    import jax.numpy as jnp
+
+    x = ir.Tensor("x", (t,))
+    w = ir.Tensor("w", (t,))
+    return ir.MultiFold(
+        domain=(t,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(ir.elem(x), ir.elem(w)),
+        out_index_map=lambda i: (), update_shape=(),
+        fn=lambda s, acc, xe, we: acc + xe * we,
+        combine=lambda a, b: a + b, name="fr")
+
+
+def groupby_program(t: int, num_keys: int, ew: int) -> ir.Pattern:
+    """Keyed fold over a (t,) stream into a dense (num_keys, ew)
+    accumulator (tileable domain: ``gbf``)."""
+    import jax.numpy as jnp
+
+    keys = ir.Tensor("keys", (t,), "int32")
+    vals = ir.Tensor("vals", (t, ew))
+    return ir.GroupByFold(
+        domain=(t,), num_keys=num_keys, elem_shape=(ew,),
+        init=lambda: jnp.zeros((num_keys, ew)),
+        reads=(ir.elem(keys),
+               ir.Access(vals, lambda i: (i, 0), (1, ew))),
+        fn=lambda s, ke, ve: (ke.astype("int32"), ve),
+        combine=lambda a, b: a + b, name="gbf")
+
+
+def gemm_program(m: int, n: int, k: int) -> ir.Pattern:
+    """The Table-3 GEMM (from the benchmark suite builders)."""
+    from repro.patterns.analytics import gemm
+    p, _, _, _ = gemm(m, n, k)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Kernel-facing block-size selection (one entry point per Pallas kernel)
+# --------------------------------------------------------------------------
+
+
+def _one(plan: TilePlan, name: str) -> Tuple[int, ...]:
+    return tuple(int(x) for x in plan.sizes[name])
+
+
+def select_gemm_blocks(m: int, n: int, k: int, *,
+                       vmem_budget: int = VMEM_BYTES, align: int = MXU,
+                       cache: Union[None, bool, str, TuningCache] = None
+                       ) -> Tuple[Tuple[int, int, int], TilePlan]:
+    plan = explore(gemm_program(m, n, k), vmem_budget=vmem_budget,
+                   align=align, cache=cache)
+    (bm, bn), (bk,) = _one(plan, "gemm"), _one(plan, "gemm_k")
+    return (bm, bn, bk), plan
+
+
+def select_attention_blocks(sq: int, sk: int, d: int, *,
+                            vmem_budget: int = VMEM_BYTES, align: int = MXU,
+                            cache: Union[None, bool, str, TuningCache] = None
+                            ) -> Tuple[Tuple[int, int], TilePlan]:
+    plan = explore(attention_program(sq, sk, d), vmem_budget=vmem_budget,
+                   align=align, cache=cache)
+    (bq,), (bk,) = _one(plan, "fa_q"), _one(plan, "fa_kv")
+    return (bq, bk), plan
+
+
+def select_scan_blocks(seq: int, n: int, dh: int, *,
+                       vmem_budget: int = VMEM_BYTES, align: int = MXU,
+                       cache: Union[None, bool, str, TuningCache] = None
+                       ) -> Tuple[int, TilePlan]:
+    plan = explore(scan_program(seq, n, dh), vmem_budget=vmem_budget,
+                   align=align, cache=cache)
+    (chunk,) = _one(plan, "ssd")
+    return chunk, plan
+
+
+def select_filter_reduce_blocks(t: int, *,
+                                vmem_budget: int = VMEM_BYTES,
+                                align: int = MXU,
+                                cache: Union[None, bool, str,
+                                             TuningCache] = None
+                                ) -> Tuple[int, TilePlan]:
+    plan = explore(filter_reduce_program(t), vmem_budget=vmem_budget,
+                   align=align, cache=cache)
+    (bt,) = _one(plan, "fr")
+    return bt, plan
+
+
+def select_groupby_blocks(t: int, num_keys: int, ew: int, *,
+                          vmem_budget: int = VMEM_BYTES, align: int = MXU,
+                          cache: Union[None, bool, str, TuningCache] = None
+                          ) -> Tuple[int, TilePlan]:
+    plan = explore(groupby_program(t, num_keys, ew),
+                   vmem_budget=vmem_budget, align=align, cache=cache)
+    (bt,) = _one(plan, "gbf")
+    return bt, plan

@@ -1,27 +1,26 @@
-"""Automated tile-size selection -- the paper's stated future work.
+"""Automated GEMM tile-size selection -- thin front-end over the
+pattern-generic DSE subsystem (``repro.core.dse``).
 
     "In future work, tile sizes for all pattern dimensions will instead
      be determined by the compiler through automated tile size selection
      using modeling and design space exploration."  (paper, §4)
 
-This module is that compiler pass for the GEMM template: enumerate
-MXU-aligned candidate tile triples, price each with the PPL cost model
-(main-memory traffic via ``core.cost.traffic`` on the tiled IR +
-metapipeline overlap), reject candidates whose buffers exceed the VMEM
-budget (``core.memory.plan_memory``), and return the argmin.
+Historically this module *was* that compiler pass, hardcoded to the
+GEMM template.  The exploration loop (candidate enumeration, cost-model
+pricing, VMEM pruning, argmin, tuning cache) now lives in
+``repro.core.dse`` and serves every Pallas kernel's ``auto_tile=True``
+path; this front-end only adapts the GEMM tile plan to the historical
+``TileChoice`` API.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Union
 
-from repro.core.cost import VMEM_BYTES, traffic
-from repro.core.memory import plan_memory
-from repro.core.strip_mine import tile
-from repro.patterns.analytics import gemm
+from repro.core.cost import VMEM_BYTES
+from repro.core.dse import MXU, SUBLANE, TuningCache, select_gemm_blocks
 
-MXU = 128
-LANE = 8
+LANE = SUBLANE  # historical alias
 
 
 @dataclasses.dataclass
@@ -33,47 +32,20 @@ class TileChoice:
     vmem_bytes: int
 
 
-def _candidates(dim: int, align: int) -> List[int]:
-    out = []
-    c = align
-    while c <= dim:
-        if dim % c == 0:
-            out.append(c)
-        c *= 2
-    return out or [dim]
-
-
 def select_gemm_tiles(m: int, n: int, k: int, *,
                       vmem_budget: int = VMEM_BYTES,
-                      align: int = MXU) -> TileChoice:
+                      align: int = MXU,
+                      cache: Union[None, bool, str, TuningCache] = None
+                      ) -> TileChoice:
     """DSE over (bm, bn, bk): minimize modeled HBM traffic of the tiled
-    IR subject to the VMEM budget."""
-    best: Optional[TileChoice] = None
-    for bm in _candidates(m, min(align, m)):
-        for bn in _candidates(n, min(align, n)):
-            for bk in _candidates(k, min(align, k)):
-                p, sizes, _, _ = gemm(m, n, k, bm, bn, bk)
-                t = tile(p, sizes)
-                plan = plan_memory(t, vmem_budget_bytes=vmem_budget)
-                if not plan.fits:
-                    continue
-                tr = traffic(t)
-                cand = TileChoice(bm, bn, bk, tr.total_reads,
-                                  plan.total_bytes)
-                if best is None or cand.traffic_words < best.traffic_words \
-                        or (cand.traffic_words == best.traffic_words
-                            and cand.vmem_bytes > best.vmem_bytes):
-                    best = cand
-    assert best is not None, "no candidate fits VMEM"
-    return best
+    IR subject to the VMEM budget (delegates to ``core.dse.explore``)."""
+    (bm, bn, bk), plan = select_gemm_blocks(
+        m, n, k, vmem_budget=vmem_budget, align=align, cache=cache)
+    return TileChoice(bm, bn, bk, plan.traffic_words, plan.vmem_bytes)
 
 
 def tuned_matmul(x, y, **kw):
     """matmul with cost-model-selected block sizes."""
     from repro.kernels.matmul import matmul
 
-    m, k = x.shape
-    _, n = y.shape
-    c = select_gemm_tiles(m, n, k)
-    return matmul(x, y, block_m=c.block_m, block_n=c.block_n,
-                  block_k=c.block_k, **kw)
+    return matmul(x, y, auto_tile=True, **kw)

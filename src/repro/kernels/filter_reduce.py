@@ -19,6 +19,13 @@ from jax.experimental.pallas import tpu as pltpu
 INTERPRET = True
 
 
+@functools.lru_cache(maxsize=None)
+def _auto_blocks(t: int) -> int:
+    from repro.core.dse import select_filter_reduce_blocks
+    bt, _ = select_filter_reduce_blocks(t)
+    return bt
+
+
 def _fr_kernel(x_ref, w_ref, lo_ref, hi_ref, o_ref):
     @pl.when(pl.program_id(0) == 0)
     def _init():
@@ -33,9 +40,13 @@ def _fr_kernel(x_ref, w_ref, lo_ref, hi_ref, o_ref):
 
 
 def filter_reduce(x: jax.Array, weight: jax.Array, lo, hi, *,
-                  block_t: int = 1024,
+                  block_t: int = 1024, auto_tile: bool = False,
                   interpret: Optional[bool] = None) -> jax.Array:
+    """``auto_tile=True`` picks block_t by DSE on the fused filter+fold
+    proxy (``repro.core.dse.filter_reduce_program``)."""
     (t,) = x.shape
+    if auto_tile:
+        block_t = _auto_blocks(t)
     block_t = min(block_t, t)
     assert t % block_t == 0
     lo = jnp.asarray([lo], jnp.float32)

@@ -24,6 +24,13 @@ INTERPRET = True
 NEG_INF = -1e30
 
 
+@functools.lru_cache(maxsize=None)
+def _auto_blocks(sq: int, sk: int, d: int) -> tuple:
+    from repro.core.dse import select_attention_blocks
+    blocks, _ = select_attention_blocks(sq, sk, d)
+    return blocks
+
+
 def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                scale: float, causal: bool, window: Optional[int],
                n_kv: int, block_q: int, block_k: int, q_offset: int):
@@ -69,17 +76,22 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     scale: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
+                    auto_tile: bool = False,
                     interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
 
     GQA: the q-head group dim is folded into the grid so each kv head's
     K/V tiles are loaded once per group member (reuse via grid order).
+    ``auto_tile=True`` picks (block_q, block_k) by DSE on the attention
+    proxy program (``repro.core.dse.attention_program``).
     """
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert hq % hkv == 0
     group = hq // hkv
     scale = scale if scale is not None else d ** -0.5
+    if auto_tile:
+        block_q, block_k = _auto_blocks(sq, sk, d)
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     assert sq % block_q == 0 and sk % block_k == 0

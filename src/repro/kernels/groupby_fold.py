@@ -19,6 +19,13 @@ from jax.experimental.pallas import tpu as pltpu
 INTERPRET = True
 
 
+@functools.lru_cache(maxsize=None)
+def _auto_blocks(t: int, num_keys: int, ew: int) -> int:
+    from repro.core.dse import select_groupby_blocks
+    bt, _ = select_groupby_blocks(t, num_keys, ew)
+    return bt
+
+
 def _gbf_kernel(k_ref, v_ref, o_ref, *, num_keys: int):
     @pl.when(pl.program_id(0) == 0)
     def _init():
@@ -33,15 +40,19 @@ def _gbf_kernel(k_ref, v_ref, o_ref, *, num_keys: int):
 
 
 def groupby_fold(keys: jax.Array, values: jax.Array, num_keys: int, *,
-                 block_t: int = 256,
+                 block_t: int = 256, auto_tile: bool = False,
                  interpret: Optional[bool] = None) -> jax.Array:
     """out[k] = sum over i with keys[i]==k of values[i].
 
-    keys: (T,) int32; values: (T,) or (T, E) -> out (num_keys, E)."""
+    keys: (T,) int32; values: (T,) or (T, E) -> out (num_keys, E).
+    ``auto_tile=True`` picks block_t by DSE on the keyed-fold proxy
+    (``repro.core.dse.groupby_program``)."""
     squeeze = values.ndim == 1
     if squeeze:
         values = values[:, None]
     t, ew = values.shape
+    if auto_tile:
+        block_t = _auto_blocks(t, num_keys, ew)
     block_t = min(block_t, t)
     assert t % block_t == 0
     out = pl.pallas_call(

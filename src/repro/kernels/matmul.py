@@ -7,8 +7,9 @@ an fp32 VMEM accumulator revisited across the reduction grid dim (= the
 accumulator-dedup'd MultiFold).  Pallas's grid pipeliner double-buffers
 the operand tiles between grid steps -- the metapipeline.
 
-Tile sizes default to MXU-aligned (128) and can be chosen by the PPL
-cost model (see repro.kernels.autotile).
+Tile sizes default to MXU-aligned (128); pass ``auto_tile=True`` to let
+the PPL cost model pick them via design space exploration
+(``repro.core.dse``, cached on disk per (signature, shapes, dtype)).
 """
 from __future__ import annotations
 
@@ -21,6 +22,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 INTERPRET = True  # CPU container; flip on real TPU
+
+
+@functools.lru_cache(maxsize=None)
+def _auto_blocks(m: int, n: int, k: int) -> Tuple[int, int, int]:
+    from repro.core.dse import select_gemm_blocks
+    blocks, _ = select_gemm_blocks(m, n, k)
+    return blocks
 
 
 def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
@@ -39,11 +47,18 @@ def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
 def matmul(x: jax.Array, y: jax.Array, *,
            block_m: int = 128, block_n: int = 128, block_k: int = 128,
            out_dtype: Optional[jnp.dtype] = None,
+           auto_tile: bool = False,
            interpret: Optional[bool] = None) -> jax.Array:
-    """``x @ y`` with explicit VMEM tiling. Shapes must divide blocks."""
+    """``x @ y`` with explicit VMEM tiling. Shapes must divide blocks.
+
+    ``auto_tile=True`` replaces the block arguments with the DSE-selected
+    tile plan for this (m, n, k).
+    """
     m, k = x.shape
     k2, n = y.shape
     assert k == k2, (x.shape, y.shape)
+    if auto_tile:
+        block_m, block_n, block_k = _auto_blocks(m, n, k)
     block_m = min(block_m, m)
     block_n = min(block_n, n)
     block_k = min(block_k, k)

@@ -23,6 +23,13 @@ from jax.experimental.pallas import tpu as pltpu
 INTERPRET = True
 
 
+@functools.lru_cache(maxsize=None)
+def _auto_blocks(seq: int, n: int, dh: int) -> int:
+    from repro.core.dse import select_scan_blocks
+    chunk, _ = select_scan_blocks(seq, n, dh)
+    return chunk
+
+
 def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
                 chunk: int):
     ci = pl.program_id(2)
@@ -60,11 +67,16 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
 
 
 def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
-             C: jax.Array, *, chunk: int = 128,
+             C: jax.Array, *, chunk: int = 128, auto_tile: bool = False,
              interpret: Optional[bool] = None) -> jax.Array:
-    """See ref.ssd_scan for semantics.  seq must divide ``chunk``."""
+    """See ref.ssd_scan for semantics.  seq must divide ``chunk``.
+
+    ``auto_tile=True`` picks the chunk length by DSE on the sequence-fold
+    proxy (``repro.core.dse.scan_program``)."""
     bsz, seq, h, dh = x.shape
     n = B.shape[-1]
+    if auto_tile:
+        chunk = _auto_blocks(seq, n, dh)
     chunk = min(chunk, seq)
     assert seq % chunk == 0, (seq, chunk)
     nc = seq // chunk

@@ -1,0 +1,9 @@
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _isolated_dse_cache(tmp_path, monkeypatch):
+    """Keep the DSE tuning cache per-test: auto_tile paths and the
+    autotile front-end default to the persistent on-disk cache, and a
+    stale ~/.cache entry must never feed an assertion."""
+    monkeypatch.setenv("REPRO_DSE_CACHE", str(tmp_path / "dse.json"))

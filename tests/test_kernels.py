@@ -16,6 +16,47 @@ def _r(key, *shape, dtype=jnp.float32):
     return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
 
 
+# auto_tile (DSE) paths -- the tuning cache is isolated per-test by the
+# conftest fixture
+# --------------------------------------------------------------------
+def test_matmul_auto_tile():
+    x, y = _r(0, 256, 128), _r(1, 128, 256)
+    out = matmul(x, y, auto_tile=True)
+    np.testing.assert_allclose(out, ref.matmul(x, y), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_auto_tile():
+    q, k, v = _r(0, 1, 4, 256, 64), _r(1, 1, 2, 256, 64), _r(2, 1, 2, 256, 64)
+    out = flash_attention(q, k, v, causal=True, auto_tile=True)
+    np.testing.assert_allclose(out, ref.attention(q, k, v, causal=True),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_auto_tile():
+    x = _r(0, 1, 128, 2, 16)
+    dt = jax.nn.softplus(_r(1, 1, 128, 2)) * 0.1
+    A = -jax.nn.softplus(_r(2, 2)) - 0.1
+    B, C = _r(3, 1, 128, 8), _r(4, 1, 128, 8)
+    out = ssd_scan(x, dt, A, B, C, auto_tile=True)
+    np.testing.assert_allclose(out, ref.ssd_scan(x, dt, A, B, C),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_groupby_fold_auto_tile():
+    keys = jax.random.randint(jax.random.PRNGKey(0), (512,), 0, 16)
+    vals = _r(1, 512, 4)
+    out = groupby_fold(keys, vals, 16, auto_tile=True)
+    np.testing.assert_allclose(out, ref.groupby_fold(keys, vals, 16),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_filter_reduce_auto_tile():
+    x, w = _r(0, 2048), _r(1, 2048)
+    out = filter_reduce(x, w, -0.5, 0.8, auto_tile=True)
+    want = ref.filter_reduce(x, jnp.float32(-0.5), jnp.float32(0.8), w)
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
 # ------------------------------------------------------------- matmul
 @pytest.mark.parametrize("m,k,n,bm,bn,bk", [
     (128, 128, 128, 128, 128, 128),
