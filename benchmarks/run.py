@@ -17,14 +17,22 @@ Prints ``name,us_per_call,derived`` CSV:
   autotile/*  (--autotile) per-benchmark comparison of hand-picked vs
               DSE-tuned tile sizes: wall time of the lowered program and
               the cost model's traffic/modeled-seconds accounting.
+  fused/*     pipeline fusion (tpchq6 / gda / kmeans as pattern chains):
+              the single-megakernel lowering vs the per-pattern chain --
+              interpret-mode wall time plus modeled HBM traffic (the
+              intermediate round-trips fusion deletes; paper Fig. 5/6).
 
 ``--only fig5c,table2`` restricts to the named sections (CI smoke).
+``--json OUT`` additionally writes the rows as machine-readable
+``BENCH_<rev>.json`` (section, name, us, derived, traffic fields) so CI
+can archive the perf trajectory per commit.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -37,14 +45,43 @@ from repro.core.codegen_jax import execute
 from repro.core.cost import traffic
 from repro.core.scheduling import build_schedule, model_speedup
 from repro.core.strip_mine import insert_tile_copies, strip_mine, tile
-from repro.patterns.analytics import SUITE
+from repro.patterns.analytics import PIPELINES, SUITE
 
 ROWS = []
+JSON_ROWS = []
 
 
-def emit(name: str, us: float, derived) -> None:
+def emit(name: str, us: float, derived, **extra) -> None:
     ROWS.append(f"{name},{us:.1f},{derived}")
+    JSON_ROWS.append({"section": name.split("/", 1)[0], "name": name,
+                      "us": round(float(us), 1), "derived": str(derived),
+                      **extra})
     print(ROWS[-1], flush=True)
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__))
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def write_json(out: str) -> str:
+    """Write rows as BENCH_<rev>.json; ``out`` is a directory (file named
+    by rev) or an explicit ``.json`` path."""
+    rev = _git_rev()
+    path = out if out.endswith(".json") else os.path.join(
+        out, f"BENCH_{rev}.json")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"rev": rev, "rows": JSON_ROWS}, f, indent=1,
+                  sort_keys=True)
+    print(f"wrote {len(JSON_ROWS)} rows to {path}")
+    return path
 
 
 def _time(fn, reps=3):
@@ -227,6 +264,43 @@ def autotile():
              "PASS" if ok else "FAIL")
 
 
+def fused():
+    """Pipeline fusion: fused megakernel vs per-pattern chain for the
+    tpchq6 / gda / kmeans pipelines.  Reports interpret-mode wall time
+    and the cost model's HBM traffic both ways; the traffic ratio is
+    the fusion win the paper's Fig. 5/6 metapipelines bank on."""
+    from repro.core.dse import explore_pipeline
+    from repro.core.pipeline import lower_pipeline
+
+    wins = 0
+    for name, builder in PIPELINES.items():
+        pipe, make_inputs, reference = builder()
+        inputs = {k: jnp.asarray(v) for k, v in make_inputs().items()}
+        ref = np.asarray(reference(make_inputs()))
+        plan = explore_pipeline(pipe)
+
+        fused_f = lower_pipeline(pipe, fused=True, plan=plan)
+        unfused_f = lower_pipeline(pipe, fused=False)
+        for label, f, words in (
+                ("fused", fused_f, plan.traffic_words),
+                ("unfused", unfused_f, plan.unfused_traffic_words)):
+            np.testing.assert_allclose(np.asarray(f(**inputs)), ref,
+                                       rtol=2e-3, atol=2e-3)
+            us = _time(lambda: f(**inputs), reps=1)
+            emit(f"fused/{name}/{label}", us,
+                 f"traffic_words={words};block={plan.block}",
+                 traffic_words=int(words), block=int(plan.block))
+        ratio = plan.traffic_ratio
+        if ratio >= 1.5:
+            wins += 1
+        emit(f"fused/{name}/traffic_ratio", 0, f"{ratio:.2f}x"
+             + (";groups=" + str(list(plan.groups)) if not plan.fused
+                else ""),
+             traffic_ratio=round(ratio, 2))
+    emit("fused/ge_1.5x_on_two_of_three", 0,
+         "PASS" if wins >= 2 else "FAIL", wins=wins)
+
+
 SECTIONS = {
     "fig7": fig7,
     "fig5c": fig5c,
@@ -235,6 +309,7 @@ SECTIONS = {
     "kernels": kernels,
     "roofline": roofline,
     "autotile": autotile,
+    "fused": fused,
 }
 
 
@@ -246,6 +321,9 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None, metavar="SECTIONS",
                     help="comma-separated subset of sections to run: "
                          + ",".join(SECTIONS))
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write rows as BENCH_<rev>.json (OUT = dir or "
+                         ".json path)")
     args = ap.parse_args(argv)
 
     if args.only:
@@ -262,6 +340,8 @@ def main(argv=None) -> None:
     for s in names:
         SECTIONS[s]()
     print(f"\n{len(ROWS)} benchmark rows emitted")
+    if args.json:
+        write_json(args.json)
 
 
 if __name__ == "__main__":

@@ -22,7 +22,7 @@ Kernels are validated in ``interpret=True`` mode against the
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -49,15 +49,29 @@ def _call_map(amap: "AffineMap", stack: Tuple) -> Tuple:
 
 def _block_index_map(copy_map: AffineMap, tile_shape: Tuple[int, ...],
                      grid_rank: int) -> Callable:
-    """BlockSpec index maps return *block* indices: element base / tile."""
+    """BlockSpec index maps return *block* indices: element base / tile.
+
+    The copy's element-level map must address whole blocks: every base
+    offset and every grid stride has to be a multiple of the tile
+    extent in that dimension, or the ``elem // tile`` division below
+    silently lands the DMA on the wrong block.
+    """
     for d_out in range(copy_map.n_out):
         base = copy_map.base[d_out]
-        assert base % tile_shape[d_out] == 0 or base == 0, (
-            "tile base must be block aligned")
+        if base % tile_shape[d_out] != 0:
+            raise ValueError(
+                f"tile copy base {copy_map.base} is not block-aligned: "
+                f"dim {d_out} offset {base} is not a multiple of tile "
+                f"extent {tile_shape[d_out]} (tile {tile_shape}); "
+                f"BlockSpec index maps address whole blocks")
         for d_in in range(copy_map.n_in):
             s = copy_map.mat[d_out][d_in]
-            assert s % tile_shape[d_out] == 0, (
-                f"copy stride {s} not a multiple of tile {tile_shape}")
+            if s % tile_shape[d_out] != 0:
+                raise ValueError(
+                    f"tile copy stride {s} (out dim {d_out}, grid dim "
+                    f"{d_in}) is not a multiple of tile extent "
+                    f"{tile_shape[d_out]} (tile {tile_shape}); the "
+                    f"grid would address partial blocks")
 
     def imap(*grid_idx):
         full = tuple(grid_idx) + (0,) * (copy_map.n_in - len(grid_idx))
@@ -65,6 +79,14 @@ def _block_index_map(copy_map: AffineMap, tile_shape: Tuple[int, ...],
         return tuple(e // t for e, t in zip(elem, tile_shape))
 
     return imap
+
+
+def _gather_window(tile, amap, window: Tuple[int, ...], stack):
+    """Slice one access window out of an on-chip tile at the given index
+    stack (singleton dims squeezed, matching the oracle's semantics)."""
+    starts = _call_map(amap, tuple(stack))
+    starts = tuple(jnp.asarray(s, jnp.int32) for s in starts[-tile.ndim:])
+    return jnp.squeeze(jax.lax.dynamic_slice(tile, starts, window))
 
 
 def _vmapped_tile_fn(inner: ir.Map, n_reads: int) -> Callable:
@@ -75,12 +97,6 @@ def _vmapped_tile_fn(inner: ir.Map, n_reads: int) -> Callable:
     """
     dom = inner.domain
 
-    def gather(tile, amap: AffineMap, window, idx):
-        starts = _call_map(amap, tuple(idx))
-        starts = tuple(jnp.asarray(s, jnp.int32)
-                       for s in starts[-tile.ndim:])
-        return jnp.squeeze(jax.lax.dynamic_slice(tile, starts, window))
-
     def run(grid_idx, *tiles):
         def body(flat):
             idx = []
@@ -90,7 +106,7 @@ def _vmapped_tile_fn(inner: ir.Map, n_reads: int) -> Callable:
                 rem = rem // e
             idx = tuple(reversed(idx))
             stack = tuple(grid_idx) + idx
-            wins = [gather(t, a.index_map, a.window, stack)
+            wins = [_gather_window(t, a.index_map, a.window, stack)
                     for t, a in zip(tiles, inner.reads)]
             return inner.fn(stack, *wins)
 
@@ -346,6 +362,256 @@ def lower_tiled_flatmap(p: ir.FlatMap) -> Callable:
             interpret=INTERPRET)(*args)
         return buf, cnt[0]
 
+    return call
+
+
+# --------------------------------------------------------------------
+# Fused pipelines: megakernel with VMEM-resident stage intermediates
+# --------------------------------------------------------------------
+
+
+def _read_tiles(reads, env: Dict[str, Any], stack):
+    """Resolve a pattern's reads against in-kernel buffers keyed by the
+    TileCopy uid (input blocks and VMEM stage scratch alike)."""
+    wins = []
+    for a in reads:
+        if not isinstance(a.src, ir.TileCopy):
+            raise NotImplementedError(
+                f"fused chain: read of {type(a.src).__name__} left in "
+                f"place (expected every source tiled into VMEM)")
+        wins.append(_gather_window(env[a.src.uid], a.index_map,
+                                   a.window, stack))
+    return wins
+
+
+def _stage_tile_fn(stage: ir.Map) -> Callable:
+    """Producer stage: compute the whole (b,)+elem tile for one grid
+    step.  f(grid_idx, env) -> tile (lands in this stage's VMEM
+    scratch)."""
+    (b,) = stage.domain
+
+    def run(grid_idx, env):
+        def body(l):
+            stack = tuple(grid_idx) + (l,)
+            return stage.fn(stack, *_read_tiles(stage.reads, env, stack))
+
+        vals = jax.vmap(body)(jnp.arange(b, dtype=jnp.int32))
+        return vals.reshape((b,) + tuple(stage.elem_shape))
+
+    return run
+
+
+def _padded_out(range_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Pallas wants >= 2-D blocks; pad scalar/vector accumulators."""
+    if len(range_shape) >= 2:
+        return tuple(range_shape)
+    if len(range_shape) == 1:
+        return (1,) + tuple(range_shape)
+    return (1, 1)
+
+
+def lower_fused_chain(p: ir.Pattern) -> Callable:
+    """One Pallas kernel for a fused pipeline chain (``pipeline.fuse``
+    output): external tensors stream through double-buffered BlockSpecs,
+    every producer stage writes its tile into VMEM scratch and is
+    consumed in place, and only the terminal accumulator block is ever
+    stored -- the paper's metapipeline (Fig. 6) with HBM touched solely
+    at the pipeline edges.
+    """
+    if not (p.strided and len(p.domain) == 1 and p.inner is not None):
+        raise NotImplementedError("fused chain: 1-D strided root expected")
+    from jax.experimental.pallas import tpu as pltpu
+
+    (grid_n,) = p.domain
+    q = p.inner
+    tensor_loads = [tc for tc in p.loads if isinstance(tc.src, ir.Tensor)]
+    stage_loads = [tc for tc in p.loads if isinstance(tc.src, ir.Pattern)]
+    in_specs = [
+        pl.BlockSpec(tc.tile_shape,
+                     _block_index_map(tc.index_map, tc.tile_shape, 1))
+        for tc in tensor_loads
+    ]
+    scratch_shapes = [pltpu.VMEM(tc.tile_shape, jnp.dtype(tc.dtype))
+                      for tc in stage_loads]
+    stage_fns = [_stage_tile_fn(tc.src) for tc in stage_loads]
+    (b,) = q.domain
+
+    def run_stages(g, ins, scratch):
+        env = {tc.uid: r[...] for tc, r in zip(tensor_loads, ins)}
+        for tc, fn, sc in zip(stage_loads, stage_fns, scratch):
+            sc[...] = fn((g,), env).astype(sc.dtype)
+            # consumers read the scratch ref, not the producing SSA
+            # value: the scratch IS the stage's on-chip buffer (it is
+            # what plan_memory charges and what the docs promise), so
+            # it must not be a dead write-only allocation
+            env[tc.uid] = sc[...]
+        return env
+
+    if isinstance(p, ir.MultiFold):
+        # terminal fold: revisited accumulator block, inner partial
+        # folded from the combine identity then merged (executor
+        # semantics; accumulator dedup keeps this single block).
+        if p.combine is None or not isinstance(q, ir.MultiFold) \
+                or not q.is_fold:
+            raise NotImplementedError(
+                "fused chain terminal must be a fold (update covers the "
+                "whole accumulator)")
+        range_shape = tuple(p.range_shape)
+        out_block = _padded_out(range_shape)
+        if len(range_shape) > 2:
+            raise NotImplementedError("fold accumulators of rank <= 2")
+
+        def kernel(*refs):
+            ins = refs[:len(tensor_loads)]
+            out = refs[len(tensor_loads)]
+            scratch = refs[len(tensor_loads) + 1:]
+            g = pl.program_id(0)
+            env = run_stages(g, ins, scratch)
+
+            @pl.when(g == 0)
+            def _init():
+                out[...] = jnp.asarray(p.init(), out.dtype
+                                       ).reshape(out_block)
+
+            def body(l, acc):
+                stack = (g, l)
+                wins = _read_tiles(q.reads, env, stack)
+                return jnp.asarray(q.fn(stack, acc, *wins),
+                                   acc.dtype).reshape(acc.shape)
+
+            partial = jax.lax.fori_loop(
+                0, b, body, jnp.asarray(q.init(), jnp.dtype(p.dtype)))
+            cur = out[...].reshape(range_shape)
+            out[...] = jnp.asarray(p.combine(cur, partial),
+                                   out.dtype).reshape(out_block)
+
+        out_spec = pl.BlockSpec(out_block,
+                                lambda i: (0,) * len(out_block))
+        out_struct = jax.ShapeDtypeStruct(out_block, jnp.dtype(p.dtype))
+        run = jax.jit(pl.pallas_call(
+            kernel, grid=(grid_n,), in_specs=in_specs,
+            out_specs=out_spec, out_shape=out_struct,
+            scratch_shapes=scratch_shapes, interpret=INTERPRET))
+
+        def call(**tensors):
+            args = [jnp.asarray(tensors[tc.src.name])
+                    for tc in tensor_loads]
+            return run(*args).reshape(range_shape)
+
+        return call
+
+    if isinstance(p, ir.GroupByFold):
+        # terminal keyed fold: CAM template (one-hot MXU scatter) into a
+        # revisited dense accumulator; combine must be elementwise add.
+        if not isinstance(q, ir.GroupByFold):
+            raise NotImplementedError("fused chain: keyed-fold tile "
+                                      "expected under GroupByFold root")
+        elem = tuple(p.elem_shape)
+        k = p.num_keys
+        ew = int(np.prod(elem)) if elem else 1
+        out_shape = (k,) + elem
+        # scalar elements would make a rank-1 (k,) block; pad to (k, 1)
+        # (Mosaic wants >= 2-D blocks, same as _padded_out for folds)
+        out_block = (k,) + (elem if elem else (1,))
+
+        def kernel(*refs):
+            ins = refs[:len(tensor_loads)]
+            out = refs[len(tensor_loads)]
+            scratch = refs[len(tensor_loads) + 1:]
+            g = pl.program_id(0)
+            env = run_stages(g, ins, scratch)
+
+            @pl.when(g == 0)
+            def _init():
+                out[...] = jnp.asarray(p.init(), out.dtype
+                                       ).reshape(out_block)
+
+            def body(l):
+                stack = (g, l)
+                return q.fn(stack, *_read_tiles(q.reads, env, stack))
+
+            keys, vals = jax.vmap(body)(jnp.arange(b, dtype=jnp.int32))
+            onehot = jax.nn.one_hot(keys, k, dtype=out.dtype)
+            vals2 = jnp.asarray(vals, out.dtype).reshape(b, ew)
+            out[...] += jnp.dot(onehot.T, vals2,
+                                preferred_element_type=out.dtype
+                                ).reshape(out_block)
+
+        out_spec = pl.BlockSpec(out_block,
+                                lambda i: (0,) * len(out_block))
+        out_struct = jax.ShapeDtypeStruct(out_block, jnp.dtype(p.dtype))
+        run = jax.jit(pl.pallas_call(
+            kernel, grid=(grid_n,), in_specs=in_specs,
+            out_specs=out_spec, out_shape=out_struct,
+            scratch_shapes=scratch_shapes, interpret=INTERPRET))
+
+        def call(**tensors):
+            args = [jnp.asarray(tensors[tc.src.name])
+                    for tc in tensor_loads]
+            return run(*args).reshape(out_shape)
+
+        return call
+
+    raise NotImplementedError(
+        f"no fused-chain template for terminal {type(p).__name__}")
+
+
+def lower_fused_pipeline(pipe, *, plan=None,
+                         vmem_budget: Optional[int] = None,
+                         cache=None) -> Callable:
+    """Lower a ``pipeline.Pipeline`` with a joint-DSE ``PipelinePlan``.
+
+    Each plan group lowers as one megakernel (``lower_fused_chain``);
+    group boundaries -- present only on the split-fallback path when no
+    fully fused candidate fits VMEM -- materialize their intermediate
+    and chain through it.  The selected plan is exposed on the returned
+    callable as ``.pipeline_plan``, and ``.group_lowerings`` records
+    what each group actually compiled to (``megakernel`` /
+    ``tiled-template`` / ``oracle-chain``) -- check it before quoting
+    the plan's fused traffic numbers for an execution.
+    """
+    from .cost import VMEM_BYTES
+    from .dse import explore_pipeline
+    from . import pipeline as plmod
+
+    budget = VMEM_BYTES if vmem_budget is None else vmem_budget
+    if plan is None:
+        plan = explore_pipeline(pipe, vmem_budget=budget, cache=cache)
+
+    runners = []
+    lowerings = []
+    for (i0, i1) in plan.groups:
+        chain = pipe.stages[i0:i1]
+        sub = plmod.Pipeline(name=f"{pipe.name}:{chain[0].name}",
+                             stages=chain)
+        try:
+            fused = plmod.fuse(sub, plan.block,
+                               vmem_budget_words=budget // 4)
+            try:
+                runner = lower_fused_chain(fused)
+                how = "megakernel"
+            except NotImplementedError:
+                # a split group may end in a bare producer Map: its
+                # fused form is an ordinary tiled pattern -- use the
+                # single-pattern templates
+                runner = lower(fused)
+                how = "tiled-template"
+        except NotImplementedError:
+            runner = plmod.unfused_runner(sub)  # correctness first
+            how = "oracle-chain"
+        runners.append((chain[-1].name, runner))
+        lowerings.append((chain[-1].name, how))
+
+    def call(**tensors):
+        env = {k: jnp.asarray(v) for k, v in tensors.items()}
+        out = None
+        for name, runner in runners:
+            out = runner(**env)
+            env[name] = out
+        return out
+
+    call.pipeline_plan = plan
+    call.group_lowerings = tuple(lowerings)
     return call
 
 

@@ -51,10 +51,28 @@ from .strip_mine import insert_tile_copies, strip_mine, tile
 MXU = 128     # MXU systolic array edge / lane count
 SUBLANE = 8   # VPU sublane count (fp32 min tile is 8 x 128)
 
+# TPU min-tile row (sublane) multiples per dtype: the fp32 8-row tile
+# becomes 16 rows for bf16/f16 and 32 for int8/fp8 (packed sublanes).
+_DTYPE_SUBLANE = {
+    "bfloat16": 16, "float16": 16, "half": 16,
+    "int8": 32, "uint8": 32,
+    "float8_e4m3fn": 32, "float8_e5m2": 32, "float8_e4m3b11fnuz": 32,
+}
+
+
+def dtype_sublane(dtype) -> int:
+    """Sublane (row) alignment for a dtype's minimum TPU tile."""
+    return _DTYPE_SUBLANE.get(str(dtype), SUBLANE)
+
 # cap on priced candidates per exploration; axes are thinned (keeping
 # their endpoints) until the cross product fits.  Recorded on the
 # returned TilePlan as ``thinned=True``.
 MAX_POINTS = 4096
+
+# Cost/memory-model revision, folded into every tuning-cache key: plans
+# priced under older model semantics (e.g. the pre-PR-2 single-buffer
+# accounting for strided loads) must not be replayed as cache hits.
+MODEL_VERSION = 2
 
 
 # --------------------------------------------------------------------------
@@ -134,16 +152,18 @@ class TuningCache:
                 self._data = {}
         return self._data
 
-    def get(self, key: str) -> Optional[TilePlan]:
+    def get(self, key: str, cls=None) -> Optional["TilePlan"]:
+        """Fetch a plan; ``cls`` selects the plan dataclass (default
+        ``TilePlan``; ``PipelinePlan`` for joint pipeline plans)."""
         d = self._load().get(key)
         if d is None:
             return None
         try:
-            return TilePlan.from_json(d)
+            return (cls or TilePlan).from_json(d)
         except (KeyError, TypeError, ValueError):
             return None
 
-    def put(self, key: str, plan: TilePlan) -> None:
+    def put(self, key: str, plan) -> None:
         data = self._load()
         data[key] = plan.to_json()
         try:
@@ -162,6 +182,19 @@ class TuningCache:
             os.unlink(self.path)
         except OSError:
             pass
+
+
+def _resolve_cache(cache: Union[None, bool, str, "TuningCache"]
+                   ) -> Optional[TuningCache]:
+    """``None`` -> default on-disk cache, path/TuningCache -> that cache,
+    ``False`` -> no caching."""
+    if cache is False:
+        return None
+    if cache is None:
+        return TuningCache()
+    if isinstance(cache, str):
+        return TuningCache(cache)
+    return cache
 
 
 def _reads_sig(p: ir.Pattern, enc: int = 0) -> Tuple:
@@ -208,7 +241,7 @@ def pattern_key(p: ir.Pattern, *,
     """
     inputs = tuple((t.name, tuple(t.shape), t.dtype)
                    for t in ir.inputs_of(p))
-    raw = repr((ir.signature(p), _reads_sig(p), inputs,
+    raw = repr((MODEL_VERSION, ir.signature(p), _reads_sig(p), inputs,
                 int(vmem_budget), int(align), tuple(extra)))
     return hashlib.sha256(raw.encode()).hexdigest()[:32]
 
@@ -218,15 +251,32 @@ def pattern_key(p: ir.Pattern, *,
 # --------------------------------------------------------------------------
 
 
-def axis_candidates(extent: int, align: int = MXU) -> List[int]:
-    """Power-of-two multiples of ``min(align, extent)`` dividing ``extent``
-    (the MXU/lane-aligned ladder), falling back to the full extent."""
-    out = []
-    c = min(align, extent)
-    while c <= extent:
-        if extent % c == 0:
-            out.append(c)
-        c *= 2
+def axis_candidates(extent: int, align: int = MXU, *,
+                    sublane: int = 1) -> List[int]:
+    """Divisors of ``extent`` that are multiples of both
+    ``min(align, extent)`` and the dtype ``sublane``, falling back to
+    the full extent.
+
+    Divisor (not power-of-two) enumeration admits ragged tiles -- a
+    96-wide domain offers 24/48 in addition to the 8/16/32 ladder --
+    while the multiple-of-align floor keeps every candidate expressible
+    on the hardware (a non-128-multiple lane tile is not).  ``sublane``
+    is the dtype row multiple (8 fp32 / 16 bf16 / 32 int8,
+    ``dtype_sublane``).  The whole extent is always a candidate: there
+    is nothing left to misalign against.
+    """
+    floor = min(align, extent)
+    divs: List[int] = []
+    d = 1
+    while d * d <= extent:
+        if extent % d == 0:
+            divs.append(d)
+            if d != extent // d:
+                divs.append(extent // d)
+        d += 1
+    out = sorted(c for c in divs
+                 if c == extent
+                 or (c % floor == 0 and c % sublane == 0))
     return out or [extent]
 
 
@@ -235,13 +285,17 @@ def tile_space(p: ir.Pattern, *, align: int = MXU
     """Per-named-pattern candidate tile tuples for every (untiled) domain.
 
     The full design space is the cross product over patterns; patterns
-    that already carry a strided domain are left alone.
+    that already carry a strided domain are left alone.  Candidate rows
+    are aligned to the pattern dtype's sublane multiple
+    (``dtype_sublane``), not the fp32-only 8-row assumption.
     """
     space: Dict[str, List[Tuple[int, ...]]] = {}
     for q in ir.walk(p):
         if q.strided or not q.domain or q.name in space:
             continue
-        per_dim = [axis_candidates(d, align) for d in q.domain]
+        sub = dtype_sublane(q.dtype)
+        per_dim = [axis_candidates(d, align, sublane=sub)
+                   for d in q.domain]
         space[q.name] = [tuple(c) for c in itertools.product(*per_dim)]
     return space
 
@@ -348,15 +402,7 @@ def explore(p: ir.Pattern, *,
     that cache, ``False`` -> no caching.  Raises ``ValueError`` when no
     candidate fits the VMEM budget.
     """
-    tc: Optional[TuningCache]
-    if cache is False:
-        tc = None
-    elif cache is None:
-        tc = TuningCache()
-    elif isinstance(cache, str):
-        tc = TuningCache(cache)
-    else:
-        tc = cache
+    tc = _resolve_cache(cache)
 
     if space is None:
         space = tile_space(p, align=align)
@@ -394,6 +440,201 @@ def explore(p: ir.Pattern, *,
                     vmem_bytes=best.vmem_bytes,
                     modeled_seconds=best.modeled_seconds,
                     explored=explored, pruned=pruned, thinned=thinned)
+    if tc is not None:
+        tc.put(key, plan)
+    return plan
+
+
+# --------------------------------------------------------------------------
+# Joint exploration for pipelines (fused multi-pattern programs)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """Joint DSE result for a pipeline: one shared streaming tile plus
+    the fusion grouping.
+
+    ``groups`` are contiguous ``[start, end)`` stage ranges; a single
+    group spanning the whole chain means fully fused (intermediates are
+    VMEM-resident, inter-stage HBM traffic = 0).  More than one group is
+    the split fallback: the intermediate at each cut round-trips HBM,
+    and the cut chosen is the cheapest under the traffic model.
+    """
+
+    block: int
+    groups: Tuple[Tuple[int, int], ...]
+    traffic_words: int            # fused plan: HBM reads + writes
+    unfused_traffic_words: int    # every intermediate round-trips HBM
+    vmem_bytes: int               # max per-group footprint
+    modeled_seconds: float
+    explored: int = 0
+    pruned: int = 0
+    cached: bool = False
+
+    @property
+    def fused(self) -> bool:
+        return len(self.groups) == 1
+
+    @property
+    def traffic_ratio(self) -> float:
+        """Unfused / fused HBM words (>= 1: the fusion win)."""
+        return self.unfused_traffic_words / max(self.traffic_words, 1)
+
+    def to_json(self) -> Dict:
+        return {
+            "block": int(self.block),
+            "groups": [list(g) for g in self.groups],
+            "traffic_words": int(self.traffic_words),
+            "unfused_traffic_words": int(self.unfused_traffic_words),
+            "vmem_bytes": int(self.vmem_bytes),
+            "modeled_seconds": float(self.modeled_seconds),
+            "explored": int(self.explored),
+            "pruned": int(self.pruned),
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "PipelinePlan":
+        return cls(block=int(d["block"]),
+                   groups=tuple(tuple(g) for g in d["groups"]),
+                   traffic_words=int(d["traffic_words"]),
+                   unfused_traffic_words=int(d["unfused_traffic_words"]),
+                   vmem_bytes=int(d["vmem_bytes"]),
+                   modeled_seconds=float(d["modeled_seconds"]),
+                   explored=int(d.get("explored", 0)),
+                   pruned=int(d.get("pruned", 0)),
+                   cached=True)
+
+
+def pipeline_key(pipe, *, vmem_budget: int = VMEM_BYTES,
+                 align: int = MXU, extra: Tuple = ()) -> str:
+    """Tuning-cache key over the *whole* pipeline signature: every
+    stage's structural signature, access descriptors, input tensor
+    shapes/dtypes and wiring, plus the exploration constraints.  Any
+    stage change invalidates the cached joint plan."""
+    parts = []
+    for s in pipe.stages:
+        inputs = tuple((t.name, tuple(t.shape), t.dtype)
+                       for t in ir.inputs_of(s))
+        # ir.signature omits a Map's elem_shape; the stage output shape
+        # is part of the wiring, so hash it explicitly
+        parts.append((ir.signature(s), _reads_sig(s), inputs, s.dtype,
+                      tuple(s.shape)))
+    raw = repr((MODEL_VERSION, pipe.name, tuple(parts),
+                int(vmem_budget), int(align), tuple(extra)))
+    return hashlib.sha256(raw.encode()).hexdigest()[:32]
+
+
+def explore_pipeline(pipe, *,
+                     vmem_budget: int = VMEM_BYTES,
+                     align: int = MXU,
+                     cache: Union[None, bool, str, TuningCache] = None,
+                     max_points: int = MAX_POINTS) -> PipelinePlan:
+    """Joint design-space exploration for a pattern pipeline.
+
+    One tile candidate set is enumerated for the shared streaming
+    domain (dtype-aware sublane alignment, ragged divisors); each
+    candidate prices the *fused* megakernel -- external traffic plus
+    metapipeline overlap of the fused schedule, with inter-stage
+    traffic = 0 because intermediates live in the VMEM plan.  When no
+    fused candidate fits VMEM the chain is split at the cheapest cut
+    (each side priced recursively; the cut intermediate round-trips
+    HBM).  Results are cached keyed on the whole pipeline signature.
+    """
+    from . import pipeline as plmod  # local import: keep layering thin
+
+    tc = _resolve_cache(cache)
+    budget_words = max(vmem_budget // 4, 1)
+    stages = tuple(pipe.stages)
+    sub = max(dtype_sublane(s.dtype) for s in stages)
+    cands = axis_candidates(pipe.shared_extent, align, sublane=sub)
+    while len(cands) > max_points and len(cands) > 2:
+        cands = (cands[::2] if cands[-1] == cands[::2][-1]
+                 else cands[::2] + [cands[-1]])
+
+    key = pipeline_key(pipe, vmem_budget=vmem_budget, align=align,
+                       extra=(tuple(cands),))
+    if tc is not None:
+        hit = tc.get(key, PipelinePlan)
+        if hit is not None:
+            return hit
+
+    counters = {"explored": 0, "pruned": 0}
+
+    def price_chain(chain: Tuple[ir.Pattern, ...], b: int):
+        """(hbm_words, vmem_bytes, seconds) of the fused chain at tile
+        ``b``; None when it busts VMEM / cannot fuse."""
+        sub_pipe = plmod.Pipeline(name=f"{pipe.name}:{chain[0].name}",
+                                  stages=chain)
+        try:
+            fused = plmod.fuse(sub_pipe, b,
+                               vmem_budget_words=budget_words)
+        except (ValueError, NotImplementedError):
+            return None
+        counters["explored"] += 1
+        mem = plan_memory(fused, vmem_budget_bytes=vmem_budget)
+        if not mem.fits:
+            counters["pruned"] += 1
+            return None
+        for q in ir.walk(fused):  # streaming fallback left in place
+            for a in q.accesses:
+                if isinstance(a.src, ir.Tensor) and a.affine:
+                    counters["pruned"] += 1
+                    return None
+        reads = traffic(fused).total_reads
+        out_w = int(np.prod(chain[-1].shape)) if chain[-1].shape else 1
+        seconds = (reads + out_w) * 4 / HBM_BYTES_PER_S
+        mp = build_schedule(fused, budget_words)
+        if mp is not None:
+            body_words = sum(s.words for s in mp.stages
+                             if s.kind in ("body", "compute"))
+            _, _, overlap = model_speedup(
+                mp, flops_per_body=body_words * 100.0)
+            seconds /= max(overlap, 1.0)
+        return (reads + out_w, mem.total_bytes, seconds)
+
+    def best_grouping(i0: int, i1: int, b: int, memo: Dict):
+        """Cheapest (words, seconds, vmem, groups) covering stages
+        [i0, i1) at tile ``b``; fused-whole preferred on ties."""
+        if (i0, i1) in memo:
+            return memo[(i0, i1)]
+        whole = price_chain(stages[i0:i1], b)
+        best = None
+        if whole is not None:
+            best = (whole[0], whole[2], whole[1], ((i0, i1),))
+        for cut in range(i0 + 1, i1):
+            left = best_grouping(i0, cut, b, memo)
+            right = best_grouping(cut, i1, b, memo)
+            if left is None or right is None:
+                continue
+            cand = (left[0] + right[0], left[1] + right[1],
+                    max(left[2], right[2]), left[3] + right[3])
+            if best is None or (cand[0], cand[1]) < (best[0], best[1]):
+                best = cand
+        memo[(i0, i1)] = best
+        return best
+
+    best = None  # (words, seconds, -vmem) lexicographic argmin
+    best_b = None
+    for b in cands:
+        g = best_grouping(0, len(stages), b, {})
+        if g is None:
+            continue
+        rank = (g[0], g[1], -g[2])
+        if best is None or rank < (best[0], best[1], -best[2]):
+            best, best_b = g, b
+    if best is None:
+        raise ValueError(
+            f"pipeline DSE: no tile candidate fits VMEM budget "
+            f"{vmem_budget} B for '{pipe.name}' "
+            f"({counters['explored']} candidates over {cands})")
+
+    plan = PipelinePlan(
+        block=int(best_b), groups=best[3],
+        traffic_words=int(best[0]),
+        unfused_traffic_words=plmod.unfused_traffic_words(pipe),
+        vmem_bytes=int(best[2]), modeled_seconds=float(best[1]),
+        explored=counters["explored"], pruned=counters["pruned"])
     if tc is not None:
         tc.put(key, plan)
     return plan
@@ -550,3 +791,37 @@ def select_groupby_blocks(t: int, num_keys: int, ew: int, *,
                    vmem_budget=vmem_budget, align=align, cache=cache)
     (bt,) = _one(plan, "gbf")
     return bt, plan
+
+
+def filter_fold_pipeline(t: int):
+    """TPC-H Q6 as a two-stage *pipeline*: a mask Map producing the
+    per-record contribution, folded by a separate sum stage.  The fused
+    lowering keeps the (t,) intermediate in VMEM scratch; the unfused
+    lowering round-trips it through HBM (the quantity
+    ``PipelinePlan.traffic_ratio`` reports)."""
+    import jax.numpy as jnp
+
+    from .pipeline import Pipeline
+
+    x = ir.Tensor("x", (t,))
+    w = ir.Tensor("w", (t,))
+    mask = ir.Map(domain=(t,), reads=(ir.elem(x), ir.elem(w)),
+                  fn=lambda s, xe, we: xe * we, name="ff_mask")
+    total = ir.MultiFold(
+        domain=(t,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(ir.elem(ir.Tensor("ff_mask", (t,))),),
+        out_index_map=lambda i: (), update_shape=(),
+        fn=lambda s, acc, v: acc + v,
+        combine=lambda a, b: a + b, name="ff_sum")
+    return Pipeline(name="filter_fold", stages=(mask, total))
+
+
+def select_fused_filter_fold_blocks(
+        t: int, *, vmem_budget: int = VMEM_BYTES, align: int = MXU,
+        cache: Union[None, bool, str, TuningCache] = None
+        ) -> Tuple[int, PipelinePlan]:
+    """Joint-DSE streaming tile for the fused filter+fold megakernel."""
+    plan = explore_pipeline(filter_fold_pipeline(t),
+                            vmem_budget=vmem_budget, align=align,
+                            cache=cache)
+    return plan.block, plan

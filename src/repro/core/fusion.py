@@ -15,11 +15,20 @@ source is a per-element pattern S is rewritten to read row ``l`` of a
 new stage ``S_tile = Map(Q.domain){ S }`` attached to O as a
 pattern-valued TileCopy.  The split is applied only when the
 intermediate (``Q.domain + S.shape``) fits on-chip (``should_split``).
+
+``fuse_pipeline_stages`` extends the same lifting *across pattern
+boundaries*: a chain of whole patterns sharing one streaming domain
+(producer Maps feeding a terminal fold / keyed fold through named
+intermediate tensors) fuses into a single tiled pattern.  Each producer
+becomes a per-tile stage (pattern-valued TileCopy) on the terminal's
+strided outer, and every read of an intermediate tensor is rewritten to
+read the staged tile in place -- so intermediates never touch main
+memory (the paper's vertical fusion, Fig. 4/5b).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 
@@ -111,3 +120,102 @@ def lift_tile_stages(p: ir.Pattern, *, enc: int = 0,
         return node
 
     return visit(p, enc)
+
+
+# --------------------------------------------------------------------------
+# Cross-pattern lifting: fuse a pipeline of whole patterns into one
+# tiled pattern (the stage-lifting split applied across pattern
+# boundaries instead of within one body).
+# --------------------------------------------------------------------------
+
+
+def _rewire_intermediates(tile_pat: ir.Pattern, orig: ir.Pattern,
+                          stage_tcs: Dict[str, ir.TileCopy]) -> ir.Pattern:
+    """Redirect ``tile_pat``'s reads of intermediate tensors to the
+    staged tiles.
+
+    ``tile_pat`` is the strip-mined tile loop of ``orig`` (reads written
+    against the (grid, local) stack); any read whose *original* source
+    is a Tensor named like a staged producer becomes a read of row ``l``
+    of that producer's TileCopy.  Only plain row accesses along the
+    shared streaming domain are fusable -- anything else (shuffles,
+    gathers across the boundary) must stay an HBM round-trip.
+    """
+    new_reads, changed = [], False
+    for a_t, a_o in zip(tile_pat.reads, orig.reads):
+        src = a_o.src
+        if not (isinstance(src, ir.Tensor) and src.name in stage_tcs):
+            new_reads.append(a_t)
+            continue
+        amap = AffineMap.probe(a_o.index_map, len(orig.domain))
+        row_col = (1,) + (0,) * (amap.n_out - 1)
+        if amap.base != (0,) * amap.n_out or amap.col(0) != row_col:
+            raise NotImplementedError(
+                f"pipeline fusion: read of intermediate '{src.name}' is "
+                f"not a row access along the shared domain "
+                f"(base={amap.base}, col={amap.col(0)})")
+        tc = stage_tcs[src.name]
+        # at tile level the stack is (g, l); the staged tile holds the
+        # current grid step's rows, so dim 0 indexes by the local l only
+        mat = tuple((0, 1) if d == 0 else (0, 0)
+                    for d in range(amap.n_out))
+        new_reads.append(dataclasses.replace(
+            a_t, src=tc,
+            index_map=AffineMap((0,) * amap.n_out, mat, arity=2),
+            window=a_o.window))
+        changed = True
+    if not changed:
+        return tile_pat
+    return dataclasses.replace(tile_pat, reads=tuple(new_reads))
+
+
+def fuse_pipeline_stages(stages: Sequence[ir.Pattern],
+                         block: int) -> ir.Pattern:
+    """Fuse a chain of untiled patterns over one shared 1-D domain.
+
+    ``stages[:-1]`` are producer ``Map``s whose outputs are consumed by
+    later stages as Tensors named after the producing stage;
+    ``stages[-1]`` is the terminal pattern.  Returns the terminal's
+    strip-mined form with every producer attached as a per-tile stage
+    (pattern-valued TileCopy) and intermediate reads rewired in place.
+    Run ``strip_mine.insert_tile_copies`` afterwards to materialize the
+    external tensor tiles.
+    """
+    from .strip_mine import strip_mine  # local import: avoid cycle
+
+    *producers, terminal = stages
+    if any(len(s.domain) != 1 for s in stages):
+        raise NotImplementedError("pipeline fusion: 1-D shared domain only")
+    (n,) = terminal.domain
+    if any(s.domain != (n,) for s in producers):
+        raise ValueError(
+            f"pipeline stages must share the streaming domain ({n},): "
+            f"{[s.domain for s in stages]}")
+    if n % block != 0:
+        raise ValueError(f"tile {block} must divide shared extent {n}")
+    for s in producers:
+        if not isinstance(s, ir.Map):
+            raise NotImplementedError(
+                f"pipeline producers must be Maps, got {type(s).__name__}")
+
+    outer = strip_mine(terminal, {terminal.name: (block,)})
+    stage_tcs: Dict[str, ir.TileCopy] = {}
+    new_loads = []
+    for s in producers:
+        stage_inner = strip_mine(s, {s.name: (block,)}).inner
+        stage_inner = _rewire_intermediates(stage_inner, s, stage_tcs)
+        n_out = 1 + len(s.elem_shape)
+        tc = ir.TileCopy(
+            src=stage_inner,
+            index_map=AffineMap((0,) * n_out,
+                                tuple((0,) for _ in range(n_out)),
+                                arity=1),
+            tile_shape=(block,) + tuple(s.elem_shape),
+            name=s.name + "_stage")
+        stage_tcs[s.name] = tc
+        new_loads.append(tc)
+
+    q2 = _rewire_intermediates(outer.inner, terminal, stage_tcs)
+    return dataclasses.replace(
+        outer, inner=q2,
+        tile_loads=tuple(outer.loads) + tuple(new_loads))

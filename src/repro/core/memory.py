@@ -78,12 +78,16 @@ def plan_memory(p: ir.Pattern,
     seen = set()
     idx = [0]
 
-    def visit(q: ir.Pattern, depth: int, in_pipeline: bool):
+    def visit(q: ir.Pattern, depth: int):
         for tc in q.loads:
             if tc.uid in seen:
                 continue
             seen.add(tc.uid)
-            dbl = in_pipeline and not tc.hoisted
+            # a strided pattern's loads are its metapipeline stages:
+            # every buffer crossing a stage boundary double-buffers
+            # (WAR avoidance between overlapped outer iterations);
+            # hoisted preloads are loop-invariant, so a single copy.
+            dbl = q.strided and not tc.hoisted
             kind = "double_buffer" if dbl else "buffer"
             buffers.append(BufferAlloc(
                 name=f"{tc.name}#{idx[0]}", kind=kind, words=tc.words,
@@ -91,7 +95,7 @@ def plan_memory(p: ir.Pattern,
                 ports=readers.get(tc.uid, 1) + 1))
             idx[0] += 1
             if isinstance(tc.src, ir.Pattern):
-                visit(tc.src, depth + 1, q.strided)
+                visit(tc.src, depth + 1)
         for a in q.accesses:
             if isinstance(a.src, ir.Tensor) and not a.affine:
                 buffers.append(BufferAlloc(
@@ -100,7 +104,7 @@ def plan_memory(p: ir.Pattern,
                     double_buffered=False, ports=2))
                 idx[0] += 1
             elif isinstance(a.src, ir.Pattern):
-                visit(a.src, depth + 1, q.strided)
+                visit(a.src, depth + 1)
         if isinstance(q, ir.GroupByFold) and not q.strided:
             buffers.append(BufferAlloc(
                 name=f"{q.name}_acc#{idx[0]}", kind="cam_dense",
@@ -114,7 +118,7 @@ def plan_memory(p: ir.Pattern,
                 double_buffered=False, ports=2))
             idx[0] += 1
         if q.inner is not None:
-            visit(q.inner, depth + 1, q.strided)
+            visit(q.inner, depth + 1)
 
-    visit(p, 0, False)
+    visit(p, 0)
     return MemoryPlan(buffers, vmem_budget_bytes)

@@ -1,0 +1,241 @@
+"""Pipeline fusion: lower multi-pattern programs as one Pallas kernel.
+
+The paper's programming model composes whole patterns into pipelines
+(tpchq6 = filter -> fold, gda = map -> keyed fold, kmeans = assign ->
+scatter); its perf claims (Fig. 5/6, the metapipeline overlap of §5)
+assume those stages are *vertically fused* so intermediates stay
+on-chip.  This module is the subsystem that makes our codegen match
+that model: instead of one ``pallas_call`` per pattern with every
+intermediate round-tripping HBM, a :class:`Pipeline` lowers as a single
+megakernel in which producer tiles land in VMEM scratch (double
+buffered per the metapipeline schedule) and are consumed in place --
+only pipeline inputs and the final output touch main memory.
+
+Structure of a pipeline:
+
+  * ``stages`` are *untiled* PPL patterns sharing one 1-D streaming
+    domain ``(n,)``; every stage except the last is a producer ``Map``.
+  * A stage reads an earlier stage's output as an ``ir.Tensor`` whose
+    ``name`` equals the producing stage's ``name`` (a *virtual* tensor:
+    it exists in HBM only on the unfused path).
+  * The last stage is the terminal reduction (``MultiFold`` fold or
+    ``GroupByFold``) and defines the pipeline output.
+
+``fuse`` builds the fused tiled IR by strip-mining the terminal and
+attaching each producer as a per-tile stage via
+``fusion.fuse_pipeline_stages`` (the paper's stage-lifting split,
+applied across pattern boundaries), then materializing external tensor
+tiles with ``insert_tile_copies``.  The fused IR is ordinary tiled PPL:
+``cost.traffic`` prices it, ``memory.plan_memory`` checks VMEM (stage
+buffers double-buffered), ``scheduling.build_schedule`` derives the
+metapipeline, ``codegen_jax.execute`` is the oracle, and
+``codegen_pallas.lower_fused_chain`` emits the megakernel.
+
+Joint tile-size selection for a pipeline lives in
+``dse.explore_pipeline`` (one shared tile per streaming domain, priced
+on the fused kernel, cached on the whole pipeline signature, with a
+split fallback at the cheapest cut when no fused candidate fits VMEM).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import ir
+from .cost import VMEM_BYTES, traffic
+from .fusion import fuse_pipeline_stages
+from .memory import plan_memory
+from .scheduling import Metapipeline, build_schedule
+from .strip_mine import insert_tile_copies
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """A chain of untiled patterns over one shared streaming domain."""
+
+    name: str
+    stages: Tuple[ir.Pattern, ...]
+
+    def __post_init__(self):
+        validate(self)
+
+    @property
+    def terminal(self) -> ir.Pattern:
+        return self.stages[-1]
+
+    @property
+    def shared_extent(self) -> int:
+        return self.stages[-1].domain[0]
+
+    @property
+    def dtype(self) -> str:
+        return self.terminal.dtype
+
+
+def intermediate_names(pipe: Pipeline) -> Tuple[str, ...]:
+    """Stage names, i.e. the virtual tensors produced inside the chain."""
+    return tuple(s.name for s in pipe.stages[:-1])
+
+
+def intermediate_words(pipe: Pipeline) -> Dict[str, int]:
+    return {s.name: int(np.prod(s.shape)) for s in pipe.stages[:-1]}
+
+
+def external_inputs(pipe: Pipeline) -> Tuple[ir.Tensor, ...]:
+    """Main-memory tensors read by any stage, minus the intermediates."""
+    inter = set(intermediate_names(pipe))
+    seen: Dict[str, ir.Tensor] = {}
+    for s in pipe.stages:
+        for t in ir.inputs_of(s):
+            if t.name not in inter:
+                seen.setdefault(t.name, t)
+    return tuple(seen.values())
+
+
+def output_words(pipe: Pipeline) -> int:
+    return int(np.prod(pipe.terminal.shape)) if pipe.terminal.shape else 1
+
+
+def validate(pipe: Pipeline) -> None:
+    if not pipe.stages:
+        raise ValueError("empty pipeline")
+    (n,) = pipe.stages[-1].domain
+    names = set()
+    for s in pipe.stages:
+        if tuple(s.domain) != (n,):
+            raise ValueError(
+                f"stage '{s.name}' domain {s.domain} != shared ({n},)")
+        if s.strided or s.loads:
+            raise ValueError(f"stage '{s.name}' must be untiled")
+        if s.name in names:
+            raise ValueError(f"duplicate stage name '{s.name}'")
+        names.add(s.name)
+    for s in pipe.stages[:-1]:
+        if not isinstance(s, ir.Map):
+            raise NotImplementedError(
+                f"producer stage '{s.name}' must be a Map")
+    # wiring: a stage may only read intermediates produced *before* it
+    produced: set = set()
+    for s in pipe.stages:
+        for a in s.accesses:
+            if isinstance(a.src, ir.Tensor) and a.src.name in names:
+                if a.src.name not in produced:
+                    raise ValueError(
+                        f"stage '{s.name}' reads '{a.src.name}' before "
+                        f"it is produced")
+        produced.add(s.name)
+
+
+# --------------------------------------------------------------------------
+# Fused IR
+# --------------------------------------------------------------------------
+
+
+def fuse(pipe: Pipeline, block: int, *,
+         vmem_budget_words: int = VMEM_BYTES // 4) -> ir.Pattern:
+    """The whole chain as one tiled pattern: producers are VMEM-resident
+    per-tile stages, only external tensors get (HBM -> VMEM) tile
+    copies."""
+    fused = fuse_pipeline_stages(pipe.stages, block)
+    return insert_tile_copies(fused, vmem_budget_words=vmem_budget_words)
+
+
+def schedule(pipe: Pipeline, block: int, *,
+             vmem_budget_words: int = VMEM_BYTES // 4
+             ) -> Optional[Metapipeline]:
+    """Metapipeline schedule of the fused kernel: every producer stage
+    and tile load crossing a stage boundary is double-buffered."""
+    return build_schedule(fuse(pipe, block,
+                               vmem_budget_words=vmem_budget_words),
+                          vmem_budget_words)
+
+
+# --------------------------------------------------------------------------
+# Reference execution (unfused path + oracle)
+# --------------------------------------------------------------------------
+
+
+def run_unfused(pipe: Pipeline, inputs: Dict[str, Any],
+                *, return_intermediates: bool = False):
+    """Execute stage-by-stage through the ``codegen_jax`` oracle,
+    materializing every intermediate (the pre-fusion lowering: one
+    kernel per pattern, intermediates round-trip HBM)."""
+    from .codegen_jax import execute  # local import: avoid cycle
+
+    env = dict(inputs)
+    out = None
+    for s in pipe.stages:
+        out = execute(s, env)
+        env[s.name] = out
+    if return_intermediates:
+        return out, {k: env[k] for k in intermediate_names(pipe)}
+    return out
+
+
+def unfused_runner(pipe: Pipeline) -> Callable:
+    """A jitted closure over the unfused stage chain (inputs as kwargs)."""
+    import jax
+
+    @jax.jit
+    def run(**inputs):
+        return run_unfused(pipe, inputs)
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# Traffic accounting (the quantity joint DSE minimizes)
+# --------------------------------------------------------------------------
+
+
+def unfused_traffic_words(pipe: Pipeline) -> int:
+    """Total HBM words moved by the per-pattern lowering: every stage's
+    main-memory reads (intermediates included -- they are real tensors
+    on this path) plus every intermediate write plus the output write."""
+    words = 0
+    for s in pipe.stages:
+        words += traffic(s).total_reads
+    words += sum(intermediate_words(pipe).values())
+    words += output_words(pipe)
+    return int(words)
+
+
+def fused_traffic_words(pipe: Pipeline, block: int, *,
+                        vmem_budget_words: int = VMEM_BYTES // 4) -> int:
+    """Total HBM words moved by the fused megakernel: external reads of
+    the fused IR (intermediates are VMEM-resident, contributing zero)
+    plus the output write."""
+    fused = fuse(pipe, block, vmem_budget_words=vmem_budget_words)
+    return int(traffic(fused).total_reads) + output_words(pipe)
+
+
+def fused_memory_plan(pipe: Pipeline, block: int, *,
+                      vmem_budget_bytes: int = VMEM_BYTES):
+    """VMEM plan of the fused kernel (stage scratch double-buffered)."""
+    fused = fuse(pipe, block,
+                 vmem_budget_words=vmem_budget_bytes // 4)
+    return plan_memory(fused, vmem_budget_bytes=vmem_budget_bytes)
+
+
+# --------------------------------------------------------------------------
+# Lowering front-end (the `fused=True` path)
+# --------------------------------------------------------------------------
+
+
+def lower_pipeline(pipe: Pipeline, *, fused: bool = True, plan=None,
+                   vmem_budget: Optional[int] = None,
+                   cache=None) -> Callable:
+    """Lower a pipeline to an executable callable.
+
+    ``fused=True`` (default) runs joint DSE and emits the single-kernel
+    Pallas lowering (``codegen_pallas.lower_fused_pipeline``);
+    ``fused=False`` returns the per-stage oracle chain -- the
+    pre-fusion semantics every fused kernel is validated against.
+    """
+    if not fused:
+        return unfused_runner(pipe)
+    from .codegen_pallas import lower_fused_pipeline
+    return lower_fused_pipeline(pipe, plan=plan, vmem_budget=vmem_budget,
+                                cache=cache)

@@ -1,3 +1,7 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# fused_filter_fold is the pipeline-fusion megakernel entry point
+# (filter -> fold in one pallas_call, intermediate in VMEM scratch);
+# see core/pipeline.py for the general multi-pattern fusion subsystem.

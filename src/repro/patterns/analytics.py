@@ -214,3 +214,114 @@ SUITE = {
     "gda": gda,
     "kmeans": kmeans,
 }
+
+
+# ==========================================================================
+# Pipelines: the same benchmarks in the paper's *composed* form -- a chain
+# of whole patterns wired through named intermediates.  These are the
+# programs pipeline fusion lowers as single megakernels (the ``fused=True``
+# path via ``core.pipeline.lower_pipeline``); unfused, every intermediate
+# round-trips HBM, which is exactly the traffic the fused lowering deletes.
+# Each builder returns ``(Pipeline, make_inputs, reference)``.
+# ==========================================================================
+
+
+def tpchq6_pipeline(n=4096):
+    """tpchq6 as filter -> fold: a mask Map producing the per-record
+    contribution (the (n,) intermediate), summed by a separate fold."""
+    from repro.core.pipeline import Pipeline
+
+    qty = ir.Tensor("qty", (n,))
+    price = ir.Tensor("price", (n,))
+    disc = ir.Tensor("disc", (n,))
+    lo, hi = 0.05, 0.95
+
+    mask = ir.Map(
+        domain=(n,),
+        reads=(ir.elem(qty), ir.elem(price), ir.elem(disc)),
+        fn=lambda s, q, pr, dc: jnp.where((q >= lo) & (q < hi),
+                                          pr * dc, 0.0),
+        name="q6_mask")
+    total = ir.MultiFold(
+        domain=(n,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(ir.elem(ir.Tensor("q6_mask", (n,))),),
+        out_index_map=lambda i: (), update_shape=(),
+        fn=lambda s, acc, v: acc + v,
+        combine=lambda a, b: a + b, name="q6_sum")
+
+    _, _, make_inputs, reference = tpchq6(n)
+    return Pipeline(name="tpchq6", stages=(mask, total)), \
+        make_inputs, reference
+
+
+def gda_pipeline(n=512, d=8, k=4):
+    """gda as map -> keyed fold: a feature Map producing [x ; x x^T] per
+    point (the (n, d + d*d) intermediate), scattered per class."""
+    from repro.core.pipeline import Pipeline
+
+    pts = ir.Tensor("pts", (n, d))
+    labels = ir.Tensor("labels", (n,))
+    ew = d + d * d
+
+    def feat_fn(s, row):
+        return jnp.concatenate([row, jnp.outer(row, row).reshape(d * d)])
+
+    feat = ir.Map(
+        domain=(n,), elem_shape=(ew,),
+        reads=(ir.Access(pts, lambda i: (i, 0), (1, d)),),
+        fn=feat_fn, name="gda_feat")
+    scatter = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(ew,),
+        init=lambda: jnp.zeros((k, ew)),
+        reads=(ir.elem(labels),
+               ir.Access(ir.Tensor("gda_feat", (n, ew)),
+                         lambda i: (i, 0), (1, ew))),
+        fn=lambda s, lab, f: (lab.astype(jnp.int32), f),
+        combine=lambda a, b: a + b, name="gda_scatter")
+
+    _, _, make_inputs, reference = gda(n, d, k)
+    return Pipeline(name="gda", stages=(feat, scatter)), \
+        make_inputs, reference
+
+
+def kmeans_pipeline(n=256, k=8, d=16):
+    """kmeans step as assign -> scatter: a Map computing each point's
+    nearest centroid (the (n,) assignment intermediate), then the
+    per-cluster sum+count scatter.  The centroids read is loop-invariant
+    and becomes the fused kernel's Pipe-0 preload."""
+    from repro.core.pipeline import Pipeline
+
+    pts = ir.Tensor("points", (n, d))
+    cents = ir.Tensor("centroids", (k, d))
+
+    def assign_fn(s, c_all, p_row):
+        d2 = jnp.sum((c_all - p_row[None, :]) ** 2, axis=1)
+        return jnp.argmin(d2).astype(jnp.float32)
+
+    assign = ir.Map(
+        domain=(n,),
+        reads=(ir.whole(cents),
+               ir.Access(pts, lambda i: (i, 0), (1, d))),
+        fn=assign_fn, name="km_assign")
+
+    def scatter_fn(s, a, p_row):
+        return a.astype(jnp.int32), jnp.concatenate(
+            [p_row, jnp.ones((1,))])
+
+    scatter = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(d + 1,),
+        init=lambda: jnp.zeros((k, d + 1)),
+        reads=(ir.elem(ir.Tensor("km_assign", (n,))),
+               ir.Access(pts, lambda i: (i, 0), (1, d))),
+        fn=scatter_fn, combine=lambda a, b: a + b, name="km_scatter")
+
+    _, _, make_inputs, reference = kmeans(n, k, d)
+    return Pipeline(name="kmeans", stages=(assign, scatter)), \
+        make_inputs, reference
+
+
+PIPELINES = {
+    "tpchq6": tpchq6_pipeline,
+    "gda": gda_pipeline,
+    "kmeans": kmeans_pipeline,
+}

@@ -21,8 +21,52 @@ from repro.core.strip_mine import tile
 def test_axis_candidates_aligned_divisors():
     assert dse.axis_candidates(512, 128) == [128, 256, 512]
     assert dse.axis_candidates(64, 128) == [64]      # align clamps
-    assert dse.axis_candidates(96, 8) == [8, 16, 32]
     assert dse.axis_candidates(1, 128) == [1]
+
+
+def test_axis_candidates_admit_ragged_divisors():
+    """Non-power-of-two divisors are candidates too (24/48 for a
+    96-wide domain), but every candidate stays a multiple of the
+    alignment floor -- a non-128-multiple lane tile is not expressible
+    on the hardware."""
+    assert dse.axis_candidates(96, 8) == [8, 16, 24, 32, 48, 96]
+    assert dse.axis_candidates(192, 64) == [64, 192]
+    assert dse.axis_candidates(384, 128) == [128, 384]  # 192 misaligns
+    assert dse.axis_candidates(768, 128) == [128, 256, 384, 768]
+    for extent in (96, 192, 360, 4096):
+        for c in dse.axis_candidates(extent, 8):
+            assert extent % c == 0          # strip mining requirement
+            assert c == extent or c % 8 == 0  # align floor preserved
+
+
+def test_axis_candidates_dtype_sublane_alignment():
+    """bf16 wants 16-row and int8 32-row sublane multiples; candidates
+    that misalign are dropped unless they are the whole extent."""
+    assert dse.dtype_sublane("float32") == 8
+    assert dse.dtype_sublane("bfloat16") == 16
+    assert dse.dtype_sublane("int8") == 32
+    assert dse.axis_candidates(96, 8, sublane=8) == [8, 16, 24, 32, 48,
+                                                     96]
+    assert dse.axis_candidates(96, 8, sublane=16) == [16, 32, 48, 96]
+    assert dse.axis_candidates(96, 8, sublane=32) == [32, 96]
+    # extent below the sublane: the whole extent stays available
+    assert dse.axis_candidates(8, 8, sublane=32) == [8]
+
+
+def test_tile_space_uses_pattern_dtype():
+    import jax.numpy as jnp
+
+    def prog(dtype):
+        x = ir.Tensor("x", (96, 128), dtype)
+        return ir.Map(domain=(96, 128), reads=(ir.elem(x),),
+                      fn=lambda s, e: e, name="m", dtype=dtype)
+
+    rows32 = sorted({c[0] for c in dse.tile_space(prog("float32"),
+                                                  align=8)["m"]})
+    rows16 = sorted({c[0] for c in dse.tile_space(prog("bfloat16"),
+                                                  align=8)["m"]})
+    assert 8 in rows32 and 24 in rows32
+    assert rows16 == [16, 32, 48, 96]
 
 
 def test_tile_space_covers_all_named_domains():

@@ -1,0 +1,154 @@
+"""fusion.lift_tile_stages + scheduling/memory double-buffer invariants.
+
+The metapipeline contracts the Pallas backend relies on (paper §5,
+Fig. 6): every buffer crossing a stage boundary is double-buffered,
+hoisted preloads are loop-invariant and single-buffered, and the
+accumulator-dedup optimization keeps a single accumulator for tiled
+MultiFolds.
+"""
+import numpy as np
+import pytest
+
+import sys, os
+sys.path.insert(0, os.path.dirname(__file__))
+from test_core_transforms import mk_gemm, mk_kmeans, mk_sumrows
+
+from repro.core import ir
+from repro.core.affine import AffineMap
+from repro.core.cost import traffic
+from repro.core.fusion import fuse_pipeline_stages, lift_tile_stages
+from repro.core.memory import plan_memory
+from repro.core.scheduling import build_schedule
+from repro.core.strip_mine import tile
+
+
+def _kmeans_tiled():
+    scatter, *_ = mk_kmeans(48, 8, 5)
+    return tile(scatter, {"scatter": (8,), "assign": (4,)})
+
+
+# --------------------------------------------------- lift_tile_stages
+def test_lift_creates_pattern_stage():
+    t = _kmeans_tiled()
+    stage_tcs = [tc for tc in t.loads if isinstance(tc.src, ir.Pattern)]
+    assert len(stage_tcs) == 1
+    (tc,) = stage_tcs
+    assert tc.name == "assign_stage"
+    assert tc.tile_shape == (8, 2)  # (b0, minDist pair)
+    # the scatter tile loop reads the staged rows, not the raw pattern
+    # (match by uid: later rewrites rebuild the TileCopy object)
+    reads = [a for a in t.inner.accesses
+             if isinstance(a.src, ir.TileCopy) and a.src.uid == tc.uid]
+    assert reads, "consumer was not rewired to the lifted stage"
+
+
+def test_lifted_stage_is_double_buffered_everywhere():
+    t = _kmeans_tiled()
+    mp = build_schedule(t)
+    stage = [s for s in mp.stages if s.kind == "compute"]
+    assert stage and all(s.double_buffered for s in stage)
+    mem = plan_memory(t)
+    stage_bufs = [b for b in mem.buffers
+                  if b.name.startswith("assign_stage")]
+    assert stage_bufs and all(b.double_buffered for b in stage_bufs)
+
+
+# --------------------------------------------------- double-buffer rules
+def test_every_stage_crossing_buffer_double_buffered():
+    """Non-hoisted loads of a strided pattern are metapipeline-crossing
+    buffers: double-buffered in both the schedule and the VMEM plan."""
+    for prog in (_kmeans_tiled(),
+                 tile(mk_sumrows(16, 32), {"sr": (4, 8)}),
+                 tile(mk_gemm(16, 16, 32), {"gemm": (8, 8),
+                                            "kfold": (16,)})):
+        mp = build_schedule(prog)
+        assert all(s.double_buffered for s in mp.stages
+                   if s.kind in ("load", "compute", "body"))
+        mem = plan_memory(prog)
+        hoisted = {tc.name for q in ir.walk(prog) for tc in q.loads
+                   if tc.hoisted}
+        for q in ir.walk(prog):
+            if not q.strided:
+                continue
+            for tc in q.loads:
+                bufs = [b for b in mem.buffers
+                        if b.name.startswith(tc.name + "#")]
+                want = not tc.hoisted
+                assert bufs and all(
+                    b.double_buffered == want for b in bufs), (
+                    tc.name, hoisted)
+
+
+def test_preloads_are_loop_invariant():
+    """Hoisted loads sit in Pipe 0: constant index map (no dependence on
+    any loop index), loaded exactly once, never double-buffered."""
+    from repro.patterns.analytics import kmeans_pipeline
+    pipe, _, _ = kmeans_pipeline()
+    from repro.core.pipeline import fuse
+    fused = fuse(pipe, 128)
+    hoisted = [tc for q in ir.walk(fused) for tc in q.loads if tc.hoisted]
+    assert any("centroids" in tc.name for tc in hoisted)
+    for tc in hoisted:
+        amap = tc.index_map
+        assert isinstance(amap, AffineMap)
+        assert not amap.dependent_dims()  # loop-invariant
+    mp = build_schedule(fused)
+    assert {s.name for s in mp.preloads} >= {tc.name for tc in hoisted
+                                             if tc.words}
+    assert all(not s.double_buffered for s in mp.preloads)
+    # loaded once: traffic charges the tensor a single tile
+    tr = traffic(fused)
+    cents = [tc for tc in hoisted if "centroids" in tc.name][0]
+    assert tr.reads["centroids"] == cents.words
+
+
+# --------------------------------------------------- accumulator dedup
+def test_accumulator_dedup_single_accumulator():
+    """A MultiFold tiled into MultiFold-of-MultiFold keeps ONE
+    accumulator: the schedule flags the dedup and the memory plan holds
+    no intermediate partial buffer (only tile-copy loads)."""
+    t = tile(mk_sumrows(16, 32), {"sr": (4, 8)})
+    mp = build_schedule(t)
+    assert mp.fused_accumulator
+    assert sum(s.kind == "body" for s in mp.stages) == 1
+    mem = plan_memory(t)
+    # all VMEM buffers are tile copies of the input -- no partial acc
+    assert all(b.name.startswith("x_tile") for b in mem.buffers), \
+        [b.name for b in mem.buffers]
+
+
+def test_accumulator_forwarding_flagged_when_acc_too_big():
+    t = tile(mk_sumrows(16, 32), {"sr": (4, 8)})
+    mp = build_schedule(t, vmem_budget_words=4)  # acc (16,) > 4 words
+    assert mp.accumulator_forwarding
+
+
+# ------------------------------------------- cross-pattern stage lifting
+def test_fuse_pipeline_stages_rejects_non_row_access():
+    import jax.numpy as jnp
+    x = ir.Tensor("x", (64,))
+    prod = ir.Map(domain=(64,), reads=(ir.elem(x),),
+                  fn=lambda s, e: e, name="p")
+    # consumer reads the intermediate *reversed*: not fusable in place
+    rev = ir.MultiFold(
+        domain=(64,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(ir.Access(ir.Tensor("p", (64,)),
+                         lambda i: (63 - i,), (1,)),),
+        out_index_map=lambda i: (), update_shape=(),
+        fn=lambda s, acc, v: acc + v, combine=lambda a, b: a + b,
+        name="c")
+    with pytest.raises(NotImplementedError, match="row access"):
+        fuse_pipeline_stages((prod, rev), 16)
+
+
+def test_fuse_pipeline_stages_requires_shared_domain():
+    import jax.numpy as jnp
+    x = ir.Tensor("x", (64,))
+    prod = ir.Map(domain=(32,), reads=(), fn=lambda s: 1.0, name="p")
+    cons = ir.MultiFold(
+        domain=(64,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(ir.elem(x),), out_index_map=lambda i: (),
+        update_shape=(), fn=lambda s, acc, v: acc + v,
+        combine=lambda a, b: a + b, name="c")
+    with pytest.raises(ValueError, match="share the streaming domain"):
+        fuse_pipeline_stages((prod, cons), 16)

@@ -1,0 +1,265 @@
+"""Pipeline fusion (core.pipeline + dse.explore_pipeline + the fused
+megakernel): the ISSUE-2 acceptance surface.
+
+Covers: fused IR structure, fused program == codegen_jax oracle ==
+numpy reference for tpchq6/gda/kmeans, the >= 1.5x modeled-traffic win,
+joint-plan caching (hit on second call, invalidated on stage change),
+the split fallback when VMEM is tight, and the block-alignment bugfix
+in codegen_pallas._block_index_map.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import dse, ir
+from repro.core import pipeline as plmod
+from repro.core.affine import AffineMap
+from repro.core.codegen_jax import execute
+from repro.core.codegen_pallas import (_block_index_map,
+                                       lower_fused_pipeline)
+from repro.patterns.analytics import PIPELINES
+
+ALL = sorted(PIPELINES)
+
+
+def _setup(name):
+    pipe, make_inputs, reference = PIPELINES[name]()
+    inputs = {k: jnp.asarray(v) for k, v in make_inputs().items()}
+    return pipe, inputs, np.asarray(reference(make_inputs()))
+
+
+# ------------------------------------------------------- fused IR shape
+@pytest.mark.parametrize("name", ALL)
+def test_fuse_structure(name):
+    pipe, _, _ = _setup(name)
+    fused = plmod.fuse(pipe, 128)
+    assert fused.strided and len(fused.domain) == 1
+    stage_loads = [tc for tc in fused.loads
+                   if isinstance(tc.src, ir.Pattern)]
+    assert len(stage_loads) == len(pipe.stages) - 1
+    # intermediates are VMEM-resident: no main-memory tensor by that name
+    inter = set(plmod.intermediate_names(pipe))
+    assert not (inter & {t.name for t in ir.inputs_of(fused)})
+    # every external tensor read became a tile copy (nothing streams)
+    for q in ir.walk(fused):
+        for a in q.accesses:
+            assert not isinstance(a.src, ir.Tensor)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_fused_ir_matches_oracle_and_reference(name):
+    pipe, inputs, ref = _setup(name)
+    out_unfused = plmod.run_unfused(pipe, inputs)
+    np.testing.assert_allclose(np.asarray(out_unfused), ref,
+                               rtol=2e-3, atol=2e-3)
+    out_fused = execute(plmod.fuse(pipe, 128), inputs)
+    np.testing.assert_allclose(np.asarray(out_fused), ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------- megakernel lowering
+@pytest.mark.parametrize("name", ALL)
+def test_megakernel_matches_oracle(name):
+    pipe, inputs, ref = _setup(name)
+    kern = lower_fused_pipeline(pipe, cache=False)
+    assert kern.pipeline_plan.fused
+    np.testing.assert_allclose(np.asarray(kern(**inputs)), ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_lower_pipeline_unfused_path():
+    pipe, inputs, ref = _setup("tpchq6")
+    run = plmod.lower_pipeline(pipe, fused=False)
+    np.testing.assert_allclose(np.asarray(run(**inputs)), ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------- traffic model
+def test_fused_traffic_at_least_1p5x_lower_on_two_of_three():
+    ratios = {}
+    for name in ALL:
+        pipe, _, _ = _setup(name)
+        plan = dse.explore_pipeline(pipe, cache=False)
+        assert plan.fused
+        ratios[name] = plan.traffic_ratio
+    assert sum(r >= 1.5 for r in ratios.values()) >= 2, ratios
+    # and the intermediates really contribute zero on the fused path:
+    # fused words == external reads + output write
+    pipe, _, _ = _setup("tpchq6")
+    plan = dse.explore_pipeline(pipe, cache=False)
+    n = pipe.shared_extent
+    assert plan.traffic_words == 3 * n + 1       # qty/price/disc + scalar
+    assert plan.unfused_traffic_words == 5 * n + 1   # + write/read of mask
+    # the standalone accounting helpers agree with the joint-DSE plan
+    assert plmod.fused_traffic_words(pipe, plan.block) \
+        == plan.traffic_words
+    assert plmod.unfused_traffic_words(pipe) == plan.unfused_traffic_words
+
+
+def test_fused_vmem_plan_double_buffers_intermediate():
+    pipe, _, _ = _setup("gda")
+    mem = plmod.fused_memory_plan(pipe, 128)
+    assert mem.fits
+    stage = [b for b in mem.buffers if b.name.startswith("gda_feat_stage")]
+    assert stage and all(b.double_buffered for b in stage)
+
+
+def test_schedule_has_stage_and_preload():
+    pipe, _, _ = _setup("kmeans")
+    mp = plmod.schedule(pipe, 128)
+    kinds = [s.kind for s in mp.stages]
+    assert "compute" in kinds and "body" in kinds
+    assert all(s.double_buffered for s in mp.stages
+               if s.kind in ("load", "compute", "body"))
+    # centroids are loop-invariant: Pipe-0 preload, single-buffered
+    assert any("centroids" in s.name for s in mp.preloads)
+
+
+# ------------------------------------------------------- joint-plan cache
+def test_pipeline_plan_cached_and_replayed(tmp_path):
+    path = str(tmp_path / "dse.json")
+    pipe, _, _ = _setup("tpchq6")
+    plan1 = dse.explore_pipeline(pipe, cache=path)
+    assert not plan1.cached
+    plan2 = dse.explore_pipeline(pipe, cache=path)
+    assert plan2.cached
+    assert plan2.block == plan1.block
+    assert plan2.groups == plan1.groups
+    assert plan2.traffic_words == plan1.traffic_words
+
+
+def test_pipeline_plan_invalidated_on_stage_change(tmp_path):
+    from repro.patterns.analytics import tpchq6_pipeline
+    path = str(tmp_path / "dse.json")
+    pipe, _, _ = tpchq6_pipeline()
+    dse.explore_pipeline(pipe, cache=path)
+    smaller, _, _ = tpchq6_pipeline(n=2048)
+    plan = dse.explore_pipeline(smaller, cache=path)
+    assert not plan.cached  # any stage signature change -> new key
+
+
+def test_pipeline_key_sensitive_to_each_stage():
+    pipe, _, _ = _setup("gda")
+    k0 = dse.pipeline_key(pipe)
+    # change only the *producer* stage's elem width
+    feat = pipe.stages[0]
+    feat2 = ir.Map(domain=feat.domain, elem_shape=(8,), reads=feat.reads,
+                   fn=feat.fn, name=feat.name)
+    pipe2 = plmod.Pipeline(name=pipe.name,
+                           stages=(feat2,) + pipe.stages[1:])
+    assert dse.pipeline_key(pipe2) != k0
+
+
+# ------------------------------------------------------- split fallback
+def test_split_fallback_when_vmem_tight():
+    pipe, inputs, ref = _setup("gda")
+    # 80 KB: the fully fused kernel (~84 KB at the smallest candidate)
+    # busts VMEM but each stage alone fits -> cheapest-cut split
+    plan = dse.explore_pipeline(pipe, vmem_budget=80_000, cache=False)
+    assert not plan.fused
+    assert plan.groups == ((0, 1), (1, 2))
+    # the split pays the intermediate round-trip the fused plan deletes
+    full = dse.explore_pipeline(pipe, cache=False)
+    assert plan.traffic_words > full.traffic_words
+    kern = lower_fused_pipeline(pipe, plan=plan, vmem_budget=80_000)
+    np.testing.assert_allclose(np.asarray(kern(**inputs)), ref,
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_no_candidate_raises():
+    pipe, _, _ = _setup("tpchq6")
+    with pytest.raises(ValueError, match="no tile candidate fits"):
+        dse.explore_pipeline(pipe, vmem_budget=64, cache=False)
+
+
+def test_group_lowerings_report_what_ran():
+    pipe, _, _ = _setup("tpchq6")
+    kern = lower_fused_pipeline(pipe, cache=False)
+    assert kern.group_lowerings == (("q6_sum", "megakernel"),)
+    split = dse.explore_pipeline(_setup("gda")[0], vmem_budget=80_000,
+                                 cache=False)
+    kern2 = lower_fused_pipeline(_setup("gda")[0], plan=split,
+                                 vmem_budget=80_000)
+    assert len(kern2.group_lowerings) == 2
+    assert kern2.group_lowerings[-1][1] == "megakernel"
+
+
+def test_megakernel_scalar_element_groupby():
+    """GroupByFold terminal with elem_shape=() (a keyed count): the
+    rank-1 (k,) accumulator must pad to a 2-D block like the fold
+    template does."""
+    n, k = 256, 8
+    x = ir.Tensor("x", (n,))
+    keymap = ir.Map(domain=(n,), reads=(ir.elem(x),),
+                    fn=lambda s, e: jnp.floor(e * k), name="keys")
+    hist = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(),
+        init=lambda: jnp.zeros((k,)),
+        reads=(ir.elem(ir.Tensor("keys", (n,))),),
+        fn=lambda s, ke: (ke.astype(jnp.int32), jnp.float32(1.0)),
+        combine=lambda a, b: a + b, name="hist")
+    pipe = plmod.Pipeline(name="hist", stages=(keymap, hist))
+    rng = np.random.RandomState(3)
+    xs = rng.rand(n).astype(np.float32) * 0.999
+    ref = np.bincount((xs * k).astype(np.int32), minlength=k
+                      ).astype(np.float32)
+    kern = lower_fused_pipeline(pipe, cache=False)
+    out = np.asarray(kern(x=jnp.asarray(xs)))
+    assert out.shape == (k,)
+    np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+# ------------------------------------------------------- validation
+def test_pipeline_validation():
+    x = ir.Tensor("x", (64,))
+    m = ir.Map(domain=(64,), reads=(ir.elem(x),),
+               fn=lambda s, e: e, name="a")
+    bad = ir.Map(domain=(32,), reads=(ir.elem(x),),
+                 fn=lambda s, e: e, name="b")
+    with pytest.raises(ValueError, match="shared"):
+        plmod.Pipeline(name="p", stages=(m, bad))
+    reads_future = ir.Map(domain=(64,),
+                          reads=(ir.elem(ir.Tensor("z", (64,))),),
+                          fn=lambda s, e: e, name="a2")
+    z = ir.Map(domain=(64,), reads=(ir.elem(x),),
+               fn=lambda s, e: e, name="z")
+    with pytest.raises(ValueError, match="before"):
+        plmod.Pipeline(name="p", stages=(reads_future, z))
+
+
+# ---------------------------------------------- kernels.fused_filter_fold
+def test_fused_filter_fold_kernel(tmp_path, monkeypatch):
+    from repro.kernels.fused_filter_fold import fused_filter_fold
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.rand(2048).astype(np.float32))
+    w = jnp.asarray(rng.rand(2048).astype(np.float32))
+    lo, hi = 0.1, 0.9
+    ref = np.sum(np.where((np.asarray(x) >= lo) & (np.asarray(x) < hi),
+                          np.asarray(x) * np.asarray(w), 0.0))
+    out = fused_filter_fold(x, w, lo, hi, block_t=256)
+    np.testing.assert_allclose(float(out), ref, rtol=1e-5)
+    monkeypatch.setenv("REPRO_DSE_CACHE", str(tmp_path / "dse.json"))
+    out = fused_filter_fold(x, w, lo, hi, auto_tile=True)
+    np.testing.assert_allclose(float(out), ref, rtol=1e-5)
+
+
+# -------------------------------------- _block_index_map alignment bugfix
+def test_block_index_map_rejects_misaligned_base():
+    # base 8 into 16-wide blocks: offset lands mid-block; previously the
+    # dead `or base == 0` arm let nothing through *except* this -- the
+    # check now raises instead of silently mis-addressing the DMA
+    amap = AffineMap((8,), ((16,),), arity=1)
+    with pytest.raises(ValueError, match="block-aligned"):
+        _block_index_map(amap, (16,), 1)
+
+
+def test_block_index_map_rejects_partial_stride():
+    amap = AffineMap((0,), ((8,),), arity=1)  # stride 8, tile 16
+    with pytest.raises(ValueError, match="partial blocks"):
+        _block_index_map(amap, (16,), 1)
+
+
+def test_block_index_map_accepts_aligned():
+    amap = AffineMap((32,), ((16,),), arity=1)
+    imap = _block_index_map(amap, (16,), 1)
+    assert imap(3) == (5,)  # (32 + 3*16) // 16
