@@ -1,0 +1,162 @@
+"""CI perf-regression gate on modeled HBM traffic (pipeline fusion).
+
+Compares a fresh ``BENCH_<rev>.json`` (``benchmarks/run.py --json``)
+against the committed ``benchmarks/baseline_traffic.json`` and fails
+(exit 1) when any pipeline's modeled traffic regresses by more than the
+tolerance (default 5%):
+
+  * fused traffic words grew        (the megakernel moves more HBM)
+  * unfused/fused ratio shrank      (the fusion win eroded)
+  * a baseline pipeline disappeared (silent coverage loss)
+
+New pipelines absent from the baseline are reported but do not fail --
+commit a refreshed baseline (``--write-baseline``) in the same PR when
+a change is intentional; the gate exists to make that an explicit,
+reviewed step rather than silent drift.
+
+Usage:
+  python benchmarks/check_regression.py \
+      --baseline benchmarks/baseline_traffic.json \
+      --bench "bench-artifacts/BENCH_*.json" [--tolerance 0.05]
+  python benchmarks/check_regression.py \
+      --bench BENCH_x.json --write-baseline benchmarks/baseline_traffic.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+DEFAULT_TOLERANCE = 0.05
+
+
+def load_doc(path_or_glob: str) -> Dict:
+    """The newest (by mtime -- BENCH names carry a git rev, not a
+    sortable stamp) matching BENCH json document; glob ok."""
+    paths = glob.glob(path_or_glob) or [path_or_glob]
+    newest = max(paths, key=lambda p: os.path.getmtime(p)
+                 if os.path.exists(p) else 0)
+    with open(newest) as f:
+        return json.load(f)
+
+
+def load_rows(path_or_glob: str) -> List[Dict]:
+    return load_doc(path_or_glob).get("rows", [])
+
+
+def extract_traffic(rows: List[Dict]) -> Dict[str, Dict[str, float]]:
+    """``fused/*`` rows -> {pipeline: {fused, unfused, ratio}}."""
+    out: Dict[str, Dict[str, float]] = {}
+    for r in rows:
+        name = r.get("name", "")
+        parts = name.split("/")
+        if r.get("section") != "fused" or len(parts) != 3:
+            continue
+        _, pipeline, label = parts
+        entry = out.setdefault(pipeline, {})
+        if label in ("fused", "unfused") and "traffic_words" in r:
+            entry[label] = float(r["traffic_words"])
+        elif label == "traffic_ratio" and "traffic_ratio" in r:
+            entry["ratio"] = float(r["traffic_ratio"])
+    return {k: v for k, v in out.items() if "fused" in v}
+
+
+def compare(baseline: Dict[str, Dict[str, float]],
+            fresh: Dict[str, Dict[str, float]],
+            tolerance: float = DEFAULT_TOLERANCE
+            ) -> Tuple[List[str], List[str]]:
+    """(failures, notes) from baseline vs fresh per-pipeline traffic."""
+    failures: List[str] = []
+    notes: List[str] = []
+    for name, base in sorted(baseline.items()):
+        cur = fresh.get(name)
+        if cur is None:
+            failures.append(
+                f"{name}: present in baseline but missing from the "
+                f"fresh benchmark (coverage loss)")
+            continue
+        limit = base["fused"] * (1.0 + tolerance)
+        if cur["fused"] > limit:
+            failures.append(
+                f"{name}: fused modeled traffic regressed "
+                f"{base['fused']:.0f} -> {cur['fused']:.0f} words "
+                f"(> {tolerance:.0%} over baseline)")
+        if "ratio" in base and "ratio" in cur \
+                and cur["ratio"] < base["ratio"] * (1.0 - tolerance):
+            failures.append(
+                f"{name}: fused/unfused win eroded "
+                f"{base['ratio']:.2f}x -> {cur['ratio']:.2f}x "
+                f"(> {tolerance:.0%} below baseline)")
+    for name in sorted(set(fresh) - set(baseline)):
+        notes.append(f"{name}: new pipeline, not in baseline -- refresh "
+                     f"baseline_traffic.json to start gating it")
+    return failures, notes
+
+
+def write_baseline(path: str, fresh: Dict[str, Dict[str, float]]) -> None:
+    doc = {"pipelines": {k: {kk: (int(vv) if kk != "ratio" else vv)
+                             for kk, vv in sorted(v.items())}
+                         for k, v in sorted(fresh.items())}}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote baseline for {len(fresh)} pipelines to {path}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="benchmarks/baseline_traffic.json")
+    ap.add_argument("--bench", required=True,
+                    help="fresh BENCH_<rev>.json path or glob")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
+    ap.add_argument("--write-baseline", default=None, metavar="PATH",
+                    help="refresh the baseline from --bench and exit")
+    args = ap.parse_args(argv)
+
+    doc = load_doc(args.bench)
+    if doc.get("error"):
+        # run.py records a mid-run crash in the (still-valid) BENCH
+        # json; its rows are partial -- neither gate against them nor
+        # let --write-baseline silently shrink the gated pipeline set
+        print(f"refusing: benchmark run recorded an error "
+              f"({doc['error']}); rows are partial", file=sys.stderr)
+        return 1
+    fresh = extract_traffic(doc.get("rows", []))
+    if args.write_baseline:
+        if not fresh:
+            print("no fused/* traffic rows in the benchmark json",
+                  file=sys.stderr)
+            return 1
+        write_baseline(args.write_baseline, fresh)
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)["pipelines"]
+    if not fresh:
+        print("REGRESSION GATE: no fused/* traffic rows in the fresh "
+              "benchmark json (did the fused section run?)",
+              file=sys.stderr)
+        return 1
+    failures, notes = compare(baseline, fresh, args.tolerance)
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        print(f"REGRESSION GATE FAILED ({len(failures)}):",
+              file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        print("If intentional, refresh the baseline in this PR:\n"
+              "  python benchmarks/check_regression.py --bench <BENCH.json>"
+              " --write-baseline benchmarks/baseline_traffic.json",
+              file=sys.stderr)
+        return 1
+    print(f"regression gate OK: {len(baseline)} pipelines within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

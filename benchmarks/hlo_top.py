@@ -28,10 +28,8 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import SHAPES, get_config
-    from repro.launch.dryrun import (_SHAPE_RE, _BYTES, _group_size,
-                                     _lower_and_cost, _scan_group)
+    from repro.launch.dryrun import _SHAPE_RE, _BYTES, _scan_group
     from repro.launch.mesh import make_production_mesh
-    from repro.launch import dryrun
 
     cfg = get_config(args.arch)
     g = _scan_group(cfg)

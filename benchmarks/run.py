@@ -17,15 +17,19 @@ Prints ``name,us_per_call,derived`` CSV:
   autotile/*  (--autotile) per-benchmark comparison of hand-picked vs
               DSE-tuned tile sizes: wall time of the lowered program and
               the cost model's traffic/modeled-seconds accounting.
-  fused/*     pipeline fusion (tpchq6 / gda / kmeans as pattern chains):
-              the single-megakernel lowering vs the per-pattern chain --
-              interpret-mode wall time plus modeled HBM traffic (the
-              intermediate round-trips fusion deletes; paper Fig. 5/6).
+  fused/*     pipeline fusion (tpchq6 / gda chains, the kmeans and
+              gda_moments fan-out DAGs, the normalize Map-terminal
+              pipeline): the single-megakernel lowering vs the
+              per-pattern DAG -- interpret-mode wall time plus modeled
+              HBM traffic (the intermediate round-trips fusion deletes;
+              paper Fig. 5/6).  These rows feed the CI perf-regression
+              gate (``benchmarks/check_regression.py``).
 
 ``--only fig5c,table2`` restricts to the named sections (CI smoke).
 ``--json OUT`` additionally writes the rows as machine-readable
 ``BENCH_<rev>.json`` (section, name, us, derived, traffic fields) so CI
-can archive the perf trajectory per commit.
+can archive the perf trajectory per commit; the file is written even
+when no rows were produced or a section crashed (empty-but-valid doc).
 """
 from __future__ import annotations
 
@@ -70,16 +74,24 @@ def _git_rev() -> str:
         return "unknown"
 
 
-def write_json(out: str) -> str:
+def write_json(out: str, error: str = "") -> str:
     """Write rows as BENCH_<rev>.json; ``out`` is a directory (file named
-    by rev) or an explicit ``.json`` path."""
+    by rev) or an explicit ``.json`` path.
+
+    Always emits a valid JSON document -- ``rows`` may be empty (e.g.
+    ``--only`` selected a section that produced nothing, or a section
+    died before its first row; ``error`` records the latter) so the CI
+    artifact upload and the regression gate never face a missing file.
+    """
     rev = _git_rev()
     path = out if out.endswith(".json") else os.path.join(
         out, f"BENCH_{rev}.json")
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    doc = {"rev": rev, "rows": JSON_ROWS}
+    if error:
+        doc["error"] = error
     with open(path, "w") as f:
-        json.dump({"rev": rev, "rows": JSON_ROWS}, f, indent=1,
-                  sort_keys=True)
+        json.dump(doc, f, indent=1, sort_keys=True)
     print(f"wrote {len(JSON_ROWS)} rows to {path}")
     return path
 
@@ -264,19 +276,37 @@ def autotile():
              "PASS" if ok else "FAIL")
 
 
+def _check_outputs(pipe, got, ref):
+    """Compare a pipeline execution (array or name -> array dict)
+    against its reference, output by output."""
+    from repro.core.pipeline import output_names
+
+    if not isinstance(ref, dict):
+        ref = {output_names(pipe)[0]: np.asarray(ref)}
+    if not isinstance(got, dict):
+        got = {output_names(pipe)[0]: got}
+    for k, want in ref.items():
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+
+
 def fused():
-    """Pipeline fusion: fused megakernel vs per-pattern chain for the
-    tpchq6 / gda / kmeans pipelines.  Reports interpret-mode wall time
-    and the cost model's HBM traffic both ways; the traffic ratio is
-    the fusion win the paper's Fig. 5/6 metapipelines bank on."""
+    """Pipeline fusion: fused megakernel vs per-pattern DAG for every
+    pipeline in ``PIPELINES`` (chains and fan-out DAGs alike; kmeans
+    and gda_moments are multi-output, normalize ends in a write-once
+    Map terminal).  Reports interpret-mode wall time and the cost
+    model's HBM traffic both ways; the traffic ratio is the fusion win
+    the paper's Fig. 5/6 metapipelines bank on, and these rows are the
+    perf surface ``benchmarks/check_regression.py`` gates in CI."""
     from repro.core.dse import explore_pipeline
     from repro.core.pipeline import lower_pipeline
 
     wins = 0
+    strict = 0
     for name, builder in PIPELINES.items():
         pipe, make_inputs, reference = builder()
         inputs = {k: jnp.asarray(v) for k, v in make_inputs().items()}
-        ref = np.asarray(reference(make_inputs()))
+        ref = reference(make_inputs())
         plan = explore_pipeline(pipe)
 
         fused_f = lower_pipeline(pipe, fused=True, plan=plan)
@@ -284,8 +314,7 @@ def fused():
         for label, f, words in (
                 ("fused", fused_f, plan.traffic_words),
                 ("unfused", unfused_f, plan.unfused_traffic_words)):
-            np.testing.assert_allclose(np.asarray(f(**inputs)), ref,
-                                       rtol=2e-3, atol=2e-3)
+            _check_outputs(pipe, f(**inputs), ref)
             us = _time(lambda: f(**inputs), reps=1)
             emit(f"fused/{name}/{label}", us,
                  f"traffic_words={words};block={plan.block}",
@@ -293,12 +322,16 @@ def fused():
         ratio = plan.traffic_ratio
         if ratio >= 1.5:
             wins += 1
+        if plan.traffic_words < plan.unfused_traffic_words:
+            strict += 1
         emit(f"fused/{name}/traffic_ratio", 0, f"{ratio:.2f}x"
              + (";groups=" + str(list(plan.groups)) if not plan.fused
                 else ""),
              traffic_ratio=round(ratio, 2))
-    emit("fused/ge_1.5x_on_two_of_three", 0,
-         "PASS" if wins >= 2 else "FAIL", wins=wins)
+    emit("fused/ge_1.5x_on_most", 0,
+         "PASS" if wins >= len(PIPELINES) - 1 else "FAIL", wins=wins)
+    emit("fused/strictly_below_unfused_all", 0,
+         "PASS" if strict == len(PIPELINES) else "FAIL", strict=strict)
 
 
 SECTIONS = {
@@ -337,11 +370,19 @@ def main(argv=None) -> None:
     if args.autotile and "autotile" not in names:
         names.append("autotile")
 
-    for s in names:
-        SECTIONS[s]()
-    print(f"\n{len(ROWS)} benchmark rows emitted")
-    if args.json:
-        write_json(args.json)
+    error = ""
+    try:
+        for s in names:
+            SECTIONS[s]()
+    except BaseException as e:
+        error = f"{type(e).__name__}: {e}"
+        raise
+    finally:
+        print(f"\n{len(ROWS)} benchmark rows emitted")
+        if args.json:
+            # written even on zero rows or a mid-section crash: the CI
+            # artifact / regression gate must always find the file
+            write_json(args.json, error=error)
 
 
 if __name__ == "__main__":

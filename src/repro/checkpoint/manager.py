@@ -22,7 +22,7 @@ import os
 import queue
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import ml_dtypes

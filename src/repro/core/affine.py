@@ -13,7 +13,6 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Sequence, Tuple
 
-import numpy as np
 
 
 @dataclass(frozen=True)

@@ -12,12 +12,10 @@ same stack as their first argument.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import ir
 

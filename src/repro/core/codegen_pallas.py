@@ -15,14 +15,17 @@ of MaxJ templates (see Table 4 mapping in DESIGN.md):
     into a revisited output block (sequential TPU grid)
   * FlatMap (Parallel FIFO template)        -> masked prefix-sum compaction
     at a dynamic offset carried in SMEM scratch across grid steps
+  * fused pipeline DAG (``lower_fused_dag``)-> one multi-output kernel:
+    producer stages in VMEM scratch, fold/CAM terminals revisit their
+    accumulator block, Map terminals stream a write-once output block
+    per grid step (never revisited)
 
 Kernels are validated in ``interpret=True`` mode against the
 ``codegen_jax`` oracle; TPU (MXU/VMEM alignment) is the codegen target.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -63,7 +66,7 @@ def _block_index_map(copy_map: AffineMap, tile_shape: Tuple[int, ...],
                 f"tile copy base {copy_map.base} is not block-aligned: "
                 f"dim {d_out} offset {base} is not a multiple of tile "
                 f"extent {tile_shape[d_out]} (tile {tile_shape}); "
-                f"BlockSpec index maps address whole blocks")
+                "BlockSpec index maps address whole blocks")
         for d_in in range(copy_map.n_in):
             s = copy_map.mat[d_out][d_in]
             if s % tile_shape[d_out] != 0:
@@ -71,7 +74,7 @@ def _block_index_map(copy_map: AffineMap, tile_shape: Tuple[int, ...],
                     f"tile copy stride {s} (out dim {d_out}, grid dim "
                     f"{d_in}) is not a multiple of tile extent "
                     f"{tile_shape[d_out]} (tile {tile_shape}); the "
-                    f"grid would address partial blocks")
+                    "grid would address partial blocks")
 
     def imap(*grid_idx):
         full = tuple(grid_idx) + (0,) * (copy_map.n_in - len(grid_idx))
@@ -378,10 +381,158 @@ def _read_tiles(reads, env: Dict[str, Any], stack):
         if not isinstance(a.src, ir.TileCopy):
             raise NotImplementedError(
                 f"fused chain: read of {type(a.src).__name__} left in "
-                f"place (expected every source tiled into VMEM)")
+                "place (expected every source tiled into VMEM)")
         wins.append(_gather_window(env[a.src.uid], a.index_map,
                                    a.window, stack))
     return wins
+
+
+def _collect_dag_loads(terminals):
+    """Union the terminal trees' root loads for one kernel.
+
+    Tensor tile copies dedupe by ``fusion.tile_copy_key`` (two terminal
+    trees reading the same tile carry distinct uids for the same DMA)
+    -- each group becomes ONE BlockSpec operand whose value binds every
+    member uid.  Producer stages dedupe by uid (``fuse_dag_stages``
+    already shares the TileCopy across consumers); first-appearance
+    order is topological because each terminal's stage list is a
+    topologically closed prefix-consistent sequence.
+    """
+    from .fusion import tile_copy_key
+
+    tensor_groups: List[Tuple[Any, List[ir.TileCopy]]] = []
+    by_key: Dict[Any, List[ir.TileCopy]] = {}
+    stage_loads: List[ir.TileCopy] = []
+    stage_seen = set()
+    for _, t in terminals:
+        for tc in t.loads:
+            if isinstance(tc.src, ir.Tensor):
+                key = tile_copy_key(tc)
+                if key not in by_key:
+                    by_key[key] = []
+                    tensor_groups.append((key, by_key[key]))
+                by_key[key].append(tc)
+            else:
+                if tc.uid in stage_seen:
+                    continue
+                stage_seen.add(tc.uid)
+                stage_loads.append(tc)
+    return tensor_groups, stage_loads
+
+
+def _terminal_emitter(p: ir.Pattern):
+    """Template selection for one fused-DAG terminal.
+
+    Returns ``(out_full, out_shape, spec, emit)``: the padded full
+    output array shape, the logical shape to reshape results to, the
+    output BlockSpec, and ``emit(g, out, env)`` which updates the
+    terminal's output block at grid step ``g``:
+
+      * fold terminal       -> revisited accumulator block (init at
+                               g == 0, partial fold merged via combine)
+      * keyed-fold terminal -> CAM template, one-hot MXU scatter into a
+                               revisited dense block
+      * Map terminal        -> write-once streaming template: the tile
+                               computed this step IS output block ``g``;
+                               no init, no revisit, no accumulator
+    """
+    q = p.inner
+    if q is None:
+        raise NotImplementedError("fused terminal: tiled body expected")
+    (b,) = q.domain
+
+    if isinstance(p, ir.MultiFold) and p.combine is None:
+        # write-once tiled Map (the paper's "(_)"): out block g streams
+        if not isinstance(q, ir.Map):
+            raise NotImplementedError(
+                "fused chain: write-once terminal must wrap a Map tile")
+        elem = tuple(q.elem_shape)
+        if len(elem) > 1:
+            raise NotImplementedError(
+                "Map terminals stream blocks of rank <= 2")
+        out_block = (b,) + (elem if elem else (1,))
+        out_shape = tuple(p.range_shape)            # (n,) + elem
+        out_full = (out_shape[0],) + (elem if elem else (1,))
+        tile_fn = _stage_tile_fn(q)
+
+        def emit_map(g, out, env):
+            tile = tile_fn((g,), env)
+            out[...] = jnp.asarray(tile, out.dtype).reshape(out_block)
+
+        spec = pl.BlockSpec(
+            out_block, lambda g: (g,) + (0,) * (len(out_block) - 1))
+        return out_full, out_shape, spec, emit_map
+
+    if isinstance(p, ir.MultiFold):
+        # terminal fold: revisited accumulator block, inner partial
+        # folded from the combine identity then merged (executor
+        # semantics; accumulator dedup keeps this single block).
+        if not isinstance(q, ir.MultiFold) or not q.is_fold:
+            raise NotImplementedError(
+                "fused chain terminal must be a fold (update covers the "
+                "whole accumulator)")
+        range_shape = tuple(p.range_shape)
+        out_block = _padded_out(range_shape)
+        if len(range_shape) > 2:
+            raise NotImplementedError("fold accumulators of rank <= 2")
+
+        def emit_fold(g, out, env):
+            @pl.when(g == 0)
+            def _init():
+                out[...] = jnp.asarray(p.init(), out.dtype
+                                       ).reshape(out_block)
+
+            def body(l, acc):
+                stack = (g, l)
+                wins = _read_tiles(q.reads, env, stack)
+                return jnp.asarray(q.fn(stack, acc, *wins),
+                                   acc.dtype).reshape(acc.shape)
+
+            partial = jax.lax.fori_loop(
+                0, b, body, jnp.asarray(q.init(), jnp.dtype(p.dtype)))
+            cur = out[...].reshape(range_shape)
+            out[...] = jnp.asarray(p.combine(cur, partial),
+                                   out.dtype).reshape(out_block)
+
+        spec = pl.BlockSpec(out_block, lambda g: (0,) * len(out_block))
+        return out_block, range_shape, spec, emit_fold  # full == block
+
+    if isinstance(p, ir.GroupByFold):
+        # terminal keyed fold: CAM template (one-hot MXU scatter) into a
+        # revisited dense accumulator; combine must be elementwise add.
+        if not isinstance(q, ir.GroupByFold):
+            raise NotImplementedError("fused chain: keyed-fold tile "
+                                      "expected under GroupByFold root")
+        elem = tuple(p.elem_shape)
+        k = p.num_keys
+        ew = int(np.prod(elem)) if elem else 1
+        out_shape = (k,) + elem
+        # scalar elements would make a rank-1 (k,) block; pad to (k, 1)
+        # (Mosaic wants >= 2-D blocks, same as _padded_out for folds)
+        out_block = (k,) + (elem if elem else (1,))
+
+        def emit_cam(g, out, env):
+            @pl.when(g == 0)
+            def _init():
+                out[...] = jnp.asarray(p.init(), out.dtype
+                                       ).reshape(out_block)
+
+            def body(l):
+                stack = (g, l)
+                return q.fn(stack, *_read_tiles(q.reads, env, stack))
+
+            keys, vals = jax.vmap(body)(jnp.arange(b, dtype=jnp.int32))
+            onehot = jax.nn.one_hot(keys, k, dtype=out.dtype)
+            vals2 = jnp.asarray(vals, out.dtype).reshape(b, ew)
+            out[...] += jnp.dot(onehot.T, vals2,
+                                preferred_element_type=out.dtype
+                                ).reshape(out_block)
+
+        spec = pl.BlockSpec(out_block, lambda g: (0,) * len(out_block))
+        return out_block, out_shape, spec, emit_cam
+
+    raise NotImplementedError(
+        f"no fused-chain template for terminal {type(p).__name__}")
 
 
 def _stage_tile_fn(stage: ir.Map) -> Callable:
@@ -410,34 +561,61 @@ def _padded_out(range_shape: Tuple[int, ...]) -> Tuple[int, ...]:
     return (1, 1)
 
 
-def lower_fused_chain(p: ir.Pattern) -> Callable:
-    """One Pallas kernel for a fused pipeline chain (``pipeline.fuse``
-    output): external tensors stream through double-buffered BlockSpecs,
-    every producer stage writes its tile into VMEM scratch and is
-    consumed in place, and only the terminal accumulator block is ever
-    stored -- the paper's metapipeline (Fig. 6) with HBM touched solely
-    at the pipeline edges.
+def lower_fused_dag(terminals, grid_n: int) -> Callable:
+    """ONE Pallas kernel for a fused pipeline DAG.
+
+    ``terminals`` is a sequence of ``(output name, fused pattern)``
+    pairs (``pipeline.fuse_dag`` output) sharing the 1-D strided grid
+    ``grid_n``.  External tensors stream through double-buffered
+    BlockSpecs (one operand per distinct tile, however many terminal
+    trees read it); every producer stage runs once per grid step into
+    its VMEM scratch and is consumed in place by all its readers
+    (fan-out pays a single stage execution and a single buffer); each
+    terminal then updates its own output block -- revisited accumulator
+    / CAM blocks for folds, a streamed write-once block for Map
+    terminals.  HBM is touched solely at the pipeline edges (paper
+    Fig. 6).  Returns ``call(**tensors) -> {name: array}``.
     """
-    if not (p.strided and len(p.domain) == 1 and p.inner is not None):
-        raise NotImplementedError("fused chain: 1-D strided root expected")
     from jax.experimental.pallas import tpu as pltpu
 
-    (grid_n,) = p.domain
-    q = p.inner
-    tensor_loads = [tc for tc in p.loads if isinstance(tc.src, ir.Tensor)]
-    stage_loads = [tc for tc in p.loads if isinstance(tc.src, ir.Pattern)]
+    terminals = tuple(terminals)
+    for _, t in terminals:
+        if not (t.strided and len(t.domain) == 1 and t.inner is not None):
+            raise NotImplementedError(
+                "fused chain: 1-D strided root expected")
+        if tuple(t.domain) != (grid_n,):
+            raise ValueError(
+                f"terminal '{t.name}' grid {t.domain} != ({grid_n},)")
+
+    tensor_groups, stage_loads = _collect_dag_loads(terminals)
+    reps = [group[0] for _, group in tensor_groups]  # one DMA per group
+    uid_lists = [[tc.uid for tc in group] for _, group in tensor_groups]
     in_specs = [
         pl.BlockSpec(tc.tile_shape,
                      _block_index_map(tc.index_map, tc.tile_shape, 1))
-        for tc in tensor_loads
+        for tc in reps
     ]
     scratch_shapes = [pltpu.VMEM(tc.tile_shape, jnp.dtype(tc.dtype))
                       for tc in stage_loads]
     stage_fns = [_stage_tile_fn(tc.src) for tc in stage_loads]
-    (b,) = q.domain
 
-    def run_stages(g, ins, scratch):
-        env = {tc.uid: r[...] for tc, r in zip(tensor_loads, ins)}
+    emitters = [_terminal_emitter(t) for _, t in terminals]
+    out_specs = [spec for _, _, spec, _ in emitters]
+    out_structs = [jax.ShapeDtypeStruct(full, jnp.dtype(t.dtype))
+                   for (full, _, _, _), (_, t) in zip(emitters, terminals)]
+
+    n_in, n_out = len(reps), len(terminals)
+
+    def kernel(*refs):
+        ins = refs[:n_in]
+        outs = refs[n_in:n_in + n_out]
+        scratch = refs[n_in + n_out:]
+        g = pl.program_id(0)
+        env: Dict[str, Any] = {}
+        for uids, r in zip(uid_lists, ins):
+            val = r[...]
+            for uid in uids:  # every tree's alias of this tile
+                env[uid] = val
         for tc, fn, sc in zip(stage_loads, stage_fns, scratch):
             sc[...] = fn((g,), env).astype(sc.dtype)
             # consumers read the scratch ref, not the producing SSA
@@ -445,130 +623,56 @@ def lower_fused_chain(p: ir.Pattern) -> Callable:
             # what plan_memory charges and what the docs promise), so
             # it must not be a dead write-only allocation
             env[tc.uid] = sc[...]
-        return env
+        for (_, _, _, emit), out in zip(emitters, outs):
+            emit(g, out, env)
 
-    if isinstance(p, ir.MultiFold):
-        # terminal fold: revisited accumulator block, inner partial
-        # folded from the combine identity then merged (executor
-        # semantics; accumulator dedup keeps this single block).
-        if p.combine is None or not isinstance(q, ir.MultiFold) \
-                or not q.is_fold:
-            raise NotImplementedError(
-                "fused chain terminal must be a fold (update covers the "
-                "whole accumulator)")
-        range_shape = tuple(p.range_shape)
-        out_block = _padded_out(range_shape)
-        if len(range_shape) > 2:
-            raise NotImplementedError("fold accumulators of rank <= 2")
+    run = jax.jit(pl.pallas_call(
+        kernel, grid=(grid_n,), in_specs=in_specs,
+        out_specs=out_specs, out_shape=out_structs,
+        scratch_shapes=scratch_shapes, interpret=INTERPRET))
 
-        def kernel(*refs):
-            ins = refs[:len(tensor_loads)]
-            out = refs[len(tensor_loads)]
-            scratch = refs[len(tensor_loads) + 1:]
-            g = pl.program_id(0)
-            env = run_stages(g, ins, scratch)
+    names = [name for name, _ in terminals]
+    shapes = [shape for _, shape, _, _ in emitters]
 
-            @pl.when(g == 0)
-            def _init():
-                out[...] = jnp.asarray(p.init(), out.dtype
-                                       ).reshape(out_block)
+    def call(**tensors):
+        args = [jnp.asarray(tensors[tc.src.name]) for tc in reps]
+        outs = run(*args)
+        return {name: out.reshape(shape)
+                for name, shape, out in zip(names, shapes, outs)}
 
-            def body(l, acc):
-                stack = (g, l)
-                wins = _read_tiles(q.reads, env, stack)
-                return jnp.asarray(q.fn(stack, acc, *wins),
-                                   acc.dtype).reshape(acc.shape)
+    return call
 
-            partial = jax.lax.fori_loop(
-                0, b, body, jnp.asarray(q.init(), jnp.dtype(p.dtype)))
-            cur = out[...].reshape(range_shape)
-            out[...] = jnp.asarray(p.combine(cur, partial),
-                                   out.dtype).reshape(out_block)
 
-        out_spec = pl.BlockSpec(out_block,
-                                lambda i: (0,) * len(out_block))
-        out_struct = jax.ShapeDtypeStruct(out_block, jnp.dtype(p.dtype))
-        run = jax.jit(pl.pallas_call(
-            kernel, grid=(grid_n,), in_specs=in_specs,
-            out_specs=out_spec, out_shape=out_struct,
-            scratch_shapes=scratch_shapes, interpret=INTERPRET))
+def lower_fused_chain(p: ir.Pattern) -> Callable:
+    """Single-terminal front-end over ``lower_fused_dag`` (the PR-2
+    chain API): one fused pattern in, the bare output array out."""
+    if not (p.strided and len(p.domain) == 1):
+        raise NotImplementedError("fused chain: 1-D strided root expected")
+    (grid_n,) = p.domain
+    dag_call = lower_fused_dag(((p.name, p),), grid_n)
 
-        def call(**tensors):
-            args = [jnp.asarray(tensors[tc.src.name])
-                    for tc in tensor_loads]
-            return run(*args).reshape(range_shape)
+    def call(**tensors):
+        return dag_call(**tensors)[p.name]
 
-        return call
-
-    if isinstance(p, ir.GroupByFold):
-        # terminal keyed fold: CAM template (one-hot MXU scatter) into a
-        # revisited dense accumulator; combine must be elementwise add.
-        if not isinstance(q, ir.GroupByFold):
-            raise NotImplementedError("fused chain: keyed-fold tile "
-                                      "expected under GroupByFold root")
-        elem = tuple(p.elem_shape)
-        k = p.num_keys
-        ew = int(np.prod(elem)) if elem else 1
-        out_shape = (k,) + elem
-        # scalar elements would make a rank-1 (k,) block; pad to (k, 1)
-        # (Mosaic wants >= 2-D blocks, same as _padded_out for folds)
-        out_block = (k,) + (elem if elem else (1,))
-
-        def kernel(*refs):
-            ins = refs[:len(tensor_loads)]
-            out = refs[len(tensor_loads)]
-            scratch = refs[len(tensor_loads) + 1:]
-            g = pl.program_id(0)
-            env = run_stages(g, ins, scratch)
-
-            @pl.when(g == 0)
-            def _init():
-                out[...] = jnp.asarray(p.init(), out.dtype
-                                       ).reshape(out_block)
-
-            def body(l):
-                stack = (g, l)
-                return q.fn(stack, *_read_tiles(q.reads, env, stack))
-
-            keys, vals = jax.vmap(body)(jnp.arange(b, dtype=jnp.int32))
-            onehot = jax.nn.one_hot(keys, k, dtype=out.dtype)
-            vals2 = jnp.asarray(vals, out.dtype).reshape(b, ew)
-            out[...] += jnp.dot(onehot.T, vals2,
-                                preferred_element_type=out.dtype
-                                ).reshape(out_block)
-
-        out_spec = pl.BlockSpec(out_block,
-                                lambda i: (0,) * len(out_block))
-        out_struct = jax.ShapeDtypeStruct(out_block, jnp.dtype(p.dtype))
-        run = jax.jit(pl.pallas_call(
-            kernel, grid=(grid_n,), in_specs=in_specs,
-            out_specs=out_spec, out_shape=out_struct,
-            scratch_shapes=scratch_shapes, interpret=INTERPRET))
-
-        def call(**tensors):
-            args = [jnp.asarray(tensors[tc.src.name])
-                    for tc in tensor_loads]
-            return run(*args).reshape(out_shape)
-
-        return call
-
-    raise NotImplementedError(
-        f"no fused-chain template for terminal {type(p).__name__}")
+    return call
 
 
 def lower_fused_pipeline(pipe, *, plan=None,
                          vmem_budget: Optional[int] = None,
                          cache=None) -> Callable:
-    """Lower a ``pipeline.Pipeline`` with a joint-DSE ``PipelinePlan``.
+    """Lower a ``pipeline.Pipeline`` (DAG) with a joint-DSE
+    ``PipelinePlan``.
 
-    Each plan group lowers as one megakernel (``lower_fused_chain``);
+    Each plan group lowers as one multi-output megakernel
+    (``lower_fused_dag``) at its own block size (``plan.group_blocks``);
     group boundaries -- present only on the split-fallback path when no
-    fully fused candidate fits VMEM -- materialize their intermediate
-    and chain through it.  The selected plan is exposed on the returned
-    callable as ``.pipeline_plan``, and ``.group_lowerings`` records
-    what each group actually compiled to (``megakernel`` /
-    ``tiled-template`` / ``oracle-chain``) -- check it before quoting
-    the plan's fused traffic numbers for an execution.
+    fully fused candidate fits VMEM -- materialize their cut
+    intermediates and chain through them.  The selected plan is exposed
+    on the returned callable as ``.pipeline_plan``, and
+    ``.group_lowerings`` records what each group actually compiled to
+    (``megakernel`` / ``oracle-chain``) -- check it before quoting the
+    plan's fused traffic numbers for an execution.  Multi-output
+    pipelines return a name -> array dict.
     """
     from .cost import VMEM_BYTES
     from .dse import explore_pipeline
@@ -580,35 +684,37 @@ def lower_fused_pipeline(pipe, *, plan=None,
 
     runners = []
     lowerings = []
-    for (i0, i1) in plan.groups:
-        chain = pipe.stages[i0:i1]
-        sub = plmod.Pipeline(name=f"{pipe.name}:{chain[0].name}",
-                             stages=chain)
+    for (i0, i1), b in zip(plan.groups, plan.group_blocks):
+        sub = plmod.sub_pipeline(pipe, i0, i1)
+        outs = plmod.output_names(sub)
         try:
-            fused = plmod.fuse(sub, plan.block,
-                               vmem_budget_words=budget // 4)
-            try:
-                runner = lower_fused_chain(fused)
-                how = "megakernel"
-            except NotImplementedError:
-                # a split group may end in a bare producer Map: its
-                # fused form is an ordinary tiled pattern -- use the
-                # single-pattern templates
-                runner = lower(fused)
-                how = "tiled-template"
+            fdag = plmod.fuse_dag(sub, b, vmem_budget_words=budget // 4)
+            runner = lower_fused_dag(fdag.terminals, fdag.grid)
+            how = "megakernel"
         except NotImplementedError:
             runner = plmod.unfused_runner(sub)  # correctness first
             how = "oracle-chain"
-        runners.append((chain[-1].name, runner))
-        lowerings.append((chain[-1].name, how))
+
+            def as_dict(r, names):
+                def run(**tensors):
+                    out = r(**tensors)
+                    return out if isinstance(out, dict) \
+                        else {names[0]: out}
+                return run
+
+            runner = as_dict(runner, outs)
+        runners.append((outs, runner))
+        lowerings.append((outs[-1], how))
+
+    out_names = plmod.output_names(pipe)
 
     def call(**tensors):
         env = {k: jnp.asarray(v) for k, v in tensors.items()}
-        out = None
-        for name, runner in runners:
-            out = runner(**env)
-            env[name] = out
-        return out
+        for _, runner in runners:
+            env.update(runner(**env))
+        if len(out_names) == 1:
+            return env[out_names[0]]
+        return {n: env[n] for n in out_names}
 
     call.pipeline_plan = plan
     call.group_lowerings = tuple(lowerings)

@@ -19,7 +19,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
-import numpy as np
 
 from . import ir
 from .affine import AffineMap

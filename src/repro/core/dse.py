@@ -38,9 +38,8 @@ import itertools
 import json
 import os
 import tempfile
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
-import numpy as np
 
 from . import ir
 from .cost import HBM_BYTES_PER_S, VMEM_BYTES, traffic
@@ -71,8 +70,10 @@ MAX_POINTS = 4096
 
 # Cost/memory-model revision, folded into every tuning-cache key: plans
 # priced under older model semantics (e.g. the pre-PR-2 single-buffer
-# accounting for strided loads) must not be replayed as cache hits.
-MODEL_VERSION = 2
+# accounting for strided loads, or the PR-2 chain-only pipeline pricing
+# superseded by the DAG accounting) must not be replayed as cache hits.
+# CI keys its persistent REPRO_DSE_CACHE on this string too.
+MODEL_VERSION = 3
 
 
 # --------------------------------------------------------------------------
@@ -452,14 +453,18 @@ def explore(p: ir.Pattern, *,
 
 @dataclasses.dataclass(frozen=True)
 class PipelinePlan:
-    """Joint DSE result for a pipeline: one shared streaming tile plus
-    the fusion grouping.
+    """Joint DSE result for a pipeline DAG: streaming tiles plus the
+    fusion grouping.
 
-    ``groups`` are contiguous ``[start, end)`` stage ranges; a single
-    group spanning the whole chain means fully fused (intermediates are
-    VMEM-resident, inter-stage HBM traffic = 0).  More than one group is
-    the split fallback: the intermediate at each cut round-trips HBM,
-    and the cut chosen is the cheapest under the traffic model.
+    ``groups`` are contiguous ``[start, end)`` ranges over the
+    pipeline's *topological* stage order; a single group spanning the
+    whole DAG means fully fused (intermediates are VMEM-resident,
+    inter-stage HBM traffic = 0).  More than one group is the split
+    fallback: every intermediate crossing a group boundary round-trips
+    HBM, the cuts are the cheapest under the traffic model, and each
+    group carries its own streaming tile in ``group_blocks`` (the split
+    paths need not share a block size).  ``block`` is the first group's
+    tile -- for a fused plan, the tile of the whole megakernel.
     """
 
     block: int
@@ -468,9 +473,15 @@ class PipelinePlan:
     unfused_traffic_words: int    # every intermediate round-trips HBM
     vmem_bytes: int               # max per-group footprint
     modeled_seconds: float
+    group_blocks: Tuple[int, ...] = ()
     explored: int = 0
     pruned: int = 0
     cached: bool = False
+
+    def __post_init__(self):
+        if not self.group_blocks:
+            object.__setattr__(self, "group_blocks",
+                               (self.block,) * len(self.groups))
 
     @property
     def fused(self) -> bool:
@@ -485,6 +496,7 @@ class PipelinePlan:
         return {
             "block": int(self.block),
             "groups": [list(g) for g in self.groups],
+            "group_blocks": [int(b) for b in self.group_blocks],
             "traffic_words": int(self.traffic_words),
             "unfused_traffic_words": int(self.unfused_traffic_words),
             "vmem_bytes": int(self.vmem_bytes),
@@ -497,6 +509,8 @@ class PipelinePlan:
     def from_json(cls, d: Dict) -> "PipelinePlan":
         return cls(block=int(d["block"]),
                    groups=tuple(tuple(g) for g in d["groups"]),
+                   group_blocks=tuple(int(b)
+                                      for b in d.get("group_blocks", ())),
                    traffic_words=int(d["traffic_words"]),
                    unfused_traffic_words=int(d["unfused_traffic_words"]),
                    vmem_bytes=int(d["vmem_bytes"]),
@@ -508,19 +522,26 @@ class PipelinePlan:
 
 def pipeline_key(pipe, *, vmem_budget: int = VMEM_BYTES,
                  align: int = MXU, extra: Tuple = ()) -> str:
-    """Tuning-cache key over the *whole* pipeline signature: every
-    stage's structural signature, access descriptors, input tensor
-    shapes/dtypes and wiring, plus the exploration constraints.  Any
-    stage change invalidates the cached joint plan."""
+    """Tuning-cache key over the pipeline's *topological DAG*
+    signature: every stage's structural signature, access descriptors,
+    input tensor shapes/dtypes -- hashed in canonical topological order
+    -- plus the wiring edges, the output set and the exploration
+    constraints.  Any stage or wiring change invalidates the cached
+    joint plan; reordering the declaration of independent stages does
+    not (the DAG is the same program)."""
+    from . import pipeline as plmod  # local import: keep layering thin
+
     parts = []
-    for s in pipe.stages:
+    for s in plmod.topo_stages(pipe):
         inputs = tuple((t.name, tuple(t.shape), t.dtype)
                        for t in ir.inputs_of(s))
         # ir.signature omits a Map's elem_shape; the stage output shape
         # is part of the wiring, so hash it explicitly
-        parts.append((ir.signature(s), _reads_sig(s), inputs, s.dtype,
-                      tuple(s.shape)))
-    raw = repr((MODEL_VERSION, pipe.name, tuple(parts),
+        parts.append((s.name, ir.signature(s), _reads_sig(s), inputs,
+                      s.dtype, tuple(s.shape)))
+    edges = tuple(sorted(set(plmod._edges(pipe))))
+    raw = repr((MODEL_VERSION, pipe.name, tuple(parts), edges,
+                tuple(plmod.output_names(pipe)),
                 int(vmem_budget), int(align), tuple(extra)))
     return hashlib.sha256(raw.encode()).hexdigest()[:32]
 
@@ -530,23 +551,26 @@ def explore_pipeline(pipe, *,
                      align: int = MXU,
                      cache: Union[None, bool, str, TuningCache] = None,
                      max_points: int = MAX_POINTS) -> PipelinePlan:
-    """Joint design-space exploration for a pattern pipeline.
+    """Joint design-space exploration for a pattern pipeline DAG.
 
     One tile candidate set is enumerated for the shared streaming
     domain (dtype-aware sublane alignment, ragged divisors); each
-    candidate prices the *fused* megakernel -- external traffic plus
-    metapipeline overlap of the fused schedule, with inter-stage
-    traffic = 0 because intermediates live in the VMEM plan.  When no
-    fused candidate fits VMEM the chain is split at the cheapest cut
-    (each side priced recursively; the cut intermediate round-trips
-    HBM).  Results are cached keyed on the whole pipeline signature.
+    candidate prices the *fused* megakernel across the whole terminal
+    set -- external traffic (fan-out tiles and stages charged once)
+    plus metapipeline overlap, with inter-stage traffic = 0 because
+    intermediates live in the VMEM plan.  When no fused candidate fits
+    VMEM the DAG is split into contiguous topological groups at the
+    cheapest cuts, each group free to pick its *own* block size (the
+    split paths need not agree); every cut intermediate round-trips
+    HBM.  Results are cached keyed on the topological DAG signature.
     """
     from . import pipeline as plmod  # local import: keep layering thin
 
     tc = _resolve_cache(cache)
     budget_words = max(vmem_budget // 4, 1)
-    stages = tuple(pipe.stages)
-    sub = max(dtype_sublane(s.dtype) for s in stages)
+    topo = plmod.topo_stages(pipe)
+    n_stages = len(topo)
+    sub = max(dtype_sublane(s.dtype) for s in topo)
     cands = axis_candidates(pipe.shared_extent, align, sublane=sub)
     while len(cands) > max_points and len(cands) > 2:
         cands = (cands[::2] if cands[-1] == cands[::2][-1]
@@ -561,76 +585,95 @@ def explore_pipeline(pipe, *,
 
     counters = {"explored": 0, "pruned": 0}
 
-    def price_chain(chain: Tuple[ir.Pattern, ...], b: int):
-        """(hbm_words, vmem_bytes, seconds) of the fused chain at tile
-        ``b``; None when it busts VMEM / cannot fuse."""
-        sub_pipe = plmod.Pipeline(name=f"{pipe.name}:{chain[0].name}",
-                                  stages=chain)
+    def price_group(sub_pipe, b: int):
+        """(hbm_words, vmem_bytes, seconds) of the sub-pipeline fused
+        at tile ``b``; None when it busts VMEM / cannot fuse."""
         try:
-            fused = plmod.fuse(sub_pipe, b,
-                               vmem_budget_words=budget_words)
+            fdag = plmod.fuse_dag(sub_pipe, b,
+                                  vmem_budget_words=budget_words)
         except (ValueError, NotImplementedError):
             return None
         counters["explored"] += 1
-        mem = plan_memory(fused, vmem_budget_bytes=vmem_budget)
+        mem = plan_memory(fdag.patterns, vmem_budget_bytes=vmem_budget)
         if not mem.fits:
             counters["pruned"] += 1
             return None
-        for q in ir.walk(fused):  # streaming fallback left in place
-            for a in q.accesses:
-                if isinstance(a.src, ir.Tensor) and a.affine:
-                    counters["pruned"] += 1
-                    return None
-        reads = traffic(fused).total_reads
-        out_w = int(np.prod(chain[-1].shape)) if chain[-1].shape else 1
+        for t in fdag.patterns:   # streaming fallback left in place
+            for q in ir.walk(t):
+                for a in q.accesses:
+                    if isinstance(a.src, ir.Tensor) and a.affine:
+                        counters["pruned"] += 1
+                        return None
+        reads = sum(plmod.dag_external_reads(fdag).values())
+        out_w = plmod.output_words(sub_pipe)
         seconds = (reads + out_w) * 4 / HBM_BYTES_PER_S
-        mp = build_schedule(fused, budget_words)
-        if mp is not None:
-            body_words = sum(s.words for s in mp.stages
-                             if s.kind in ("body", "compute"))
-            _, _, overlap = model_speedup(
-                mp, flops_per_body=body_words * 100.0)
-            seconds /= max(overlap, 1.0)
+        # overlap: most conservative terminal schedule of the kernel
+        overlaps = []
+        for t in fdag.patterns:
+            mp = build_schedule(t, budget_words)
+            if mp is not None:
+                body_words = sum(s.words for s in mp.stages
+                                 if s.kind in ("body", "compute"))
+                _, _, ov = model_speedup(
+                    mp, flops_per_body=body_words * 100.0)
+                overlaps.append(ov)
+        if overlaps:
+            seconds /= max(min(overlaps), 1.0)
         return (reads + out_w, mem.total_bytes, seconds)
 
-    def best_grouping(i0: int, i1: int, b: int, memo: Dict):
-        """Cheapest (words, seconds, vmem, groups) covering stages
-        [i0, i1) at tile ``b``; fused-whole preferred on ties."""
+    def best_group(i0: int, i1: int, memo: Dict):
+        """Per-group block choice: cheapest (words, seconds, vmem,
+        block) for topo stages [i0, i1) over the candidate tiles."""
         if (i0, i1) in memo:
             return memo[(i0, i1)]
-        whole = price_chain(stages[i0:i1], b)
         best = None
-        if whole is not None:
-            best = (whole[0], whole[2], whole[1], ((i0, i1),))
-        for cut in range(i0 + 1, i1):
-            left = best_grouping(i0, cut, b, memo)
-            right = best_grouping(cut, i1, b, memo)
-            if left is None or right is None:
-                continue
-            cand = (left[0] + right[0], left[1] + right[1],
-                    max(left[2], right[2]), left[3] + right[3])
-            if best is None or (cand[0], cand[1]) < (best[0], best[1]):
-                best = cand
+        try:
+            # built once per range: block-independent (validate / topo
+            # analysis is not free, cands can be large)
+            sub_pipe = plmod.sub_pipeline(pipe, i0, i1)
+        except (ValueError, NotImplementedError):
+            # e.g. a cut that makes a terminal both output and
+            # consumed: this grouping is simply infeasible
+            sub_pipe = None
+        if sub_pipe is not None:
+            for b in cands:
+                priced = price_group(sub_pipe, b)
+                if priced is None:
+                    continue
+                rank = (priced[0], priced[2], -priced[1])
+                if best is None or rank < (best[0], best[1], -best[2]):
+                    best = (priced[0], priced[2], priced[1], b)
         memo[(i0, i1)] = best
         return best
 
-    best = None  # (words, seconds, -vmem) lexicographic argmin
-    best_b = None
-    for b in cands:
-        g = best_grouping(0, len(stages), b, {})
-        if g is None:
-            continue
-        rank = (g[0], g[1], -g[2])
-        if best is None or rank < (best[0], best[1], -best[2]):
-            best, best_b = g, b
+    # prefix DP over contiguous topological groups; fewer groups
+    # preferred on ties (the j == 0 single-group candidate is tried
+    # first and later candidates must be strictly cheaper)
+    memo: Dict = {}
+    state: List = [None] * (n_stages + 1)
+    state[0] = (0, 0.0, 0, (), ())   # words, seconds, vmem, groups, blocks
+    for i in range(1, n_stages + 1):
+        for j in range(0, i):
+            if state[j] is None:
+                continue
+            g = best_group(j, i, memo)
+            if g is None:
+                continue
+            cand = (state[j][0] + g[0], state[j][1] + g[1],
+                    max(state[j][2], g[2]),
+                    state[j][3] + ((j, i),), state[j][4] + (g[3],))
+            if state[i] is None or (cand[0], cand[1]) \
+                    < (state[i][0], state[i][1]):
+                state[i] = cand
+    best = state[n_stages]
     if best is None:
         raise ValueError(
-            f"pipeline DSE: no tile candidate fits VMEM budget "
+            "pipeline DSE: no tile candidate fits VMEM budget "
             f"{vmem_budget} B for '{pipe.name}' "
             f"({counters['explored']} candidates over {cands})")
 
     plan = PipelinePlan(
-        block=int(best_b), groups=best[3],
+        block=int(best[4][0]), groups=best[3], group_blocks=best[4],
         traffic_words=int(best[0]),
         unfused_traffic_words=plmod.unfused_traffic_words(pipe),
         vmem_bytes=int(best[2]), modeled_seconds=float(best[1]),
@@ -823,5 +866,20 @@ def select_fused_filter_fold_blocks(
     """Joint-DSE streaming tile for the fused filter+fold megakernel."""
     plan = explore_pipeline(filter_fold_pipeline(t),
                             vmem_budget=vmem_budget, align=align,
+                            cache=cache)
+    return plan.block, plan
+
+
+def select_fused_kmeans_blocks(
+        n: int, k: int, d: int, *, vmem_budget: int = VMEM_BYTES,
+        align: int = MXU,
+        cache: Union[None, bool, str, TuningCache] = None
+        ) -> Tuple[int, PipelinePlan]:
+    """Joint-DSE streaming tile for the fused k-means DAG megakernel
+    (assign -> {scatter-sum, count}; one plan for the whole DAG, cached
+    on its topological signature)."""
+    from repro.patterns.analytics import kmeans_pipeline
+    pipe, _, _ = kmeans_pipeline(n, k, d)
+    plan = explore_pipeline(pipe, vmem_budget=vmem_budget, align=align,
                             cache=cache)
     return plan.block, plan

@@ -16,14 +16,20 @@ new stage ``S_tile = Map(Q.domain){ S }`` attached to O as a
 pattern-valued TileCopy.  The split is applied only when the
 intermediate (``Q.domain + S.shape``) fits on-chip (``should_split``).
 
-``fuse_pipeline_stages`` extends the same lifting *across pattern
-boundaries*: a chain of whole patterns sharing one streaming domain
-(producer Maps feeding a terminal fold / keyed fold through named
-intermediate tensors) fuses into a single tiled pattern.  Each producer
-becomes a per-tile stage (pattern-valued TileCopy) on the terminal's
-strided outer, and every read of an intermediate tensor is rewritten to
-read the staged tile in place -- so intermediates never touch main
-memory (the paper's vertical fusion, Fig. 4/5b).
+``fuse_dag_stages`` extends the same lifting *across pattern
+boundaries*: a DAG of whole patterns sharing one streaming domain
+(producer Maps feeding terminal folds / keyed folds / write-once Maps
+through named intermediate tensors) fuses into one tiled pattern per
+terminal, all sharing a single strided outer shape.  Each producer
+becomes a per-tile stage (pattern-valued TileCopy) created *exactly
+once* -- a fan-out intermediate consumed by several stages or terminals
+is represented by one TileCopy whose stable ``uid`` every consumer
+references, so downstream passes (memory planning, codegen) see one
+VMEM scratch buffer and one set of HBM feeds however many readers it
+has.  Every read of an intermediate tensor is rewritten to read the
+staged tile in place -- so intermediates never touch main memory (the
+paper's vertical fusion, Fig. 4/5b).  ``fuse_pipeline_stages`` is the
+chain-shaped front-end (terminal = last stage) kept from PR 2.
 """
 from __future__ import annotations
 
@@ -152,7 +158,7 @@ def _rewire_intermediates(tile_pat: ir.Pattern, orig: ir.Pattern,
         if amap.base != (0,) * amap.n_out or amap.col(0) != row_col:
             raise NotImplementedError(
                 f"pipeline fusion: read of intermediate '{src.name}' is "
-                f"not a row access along the shared domain "
+                "not a row access along the shared domain "
                 f"(base={amap.base}, col={amap.col(0)})")
         tc = stage_tcs[src.name]
         # at tile level the stack is (g, l); the staged tile holds the
@@ -169,25 +175,40 @@ def _rewire_intermediates(tile_pat: ir.Pattern, orig: ir.Pattern,
     return dataclasses.replace(tile_pat, reads=tuple(new_reads))
 
 
-def fuse_pipeline_stages(stages: Sequence[ir.Pattern],
-                         block: int) -> ir.Pattern:
-    """Fuse a chain of untiled patterns over one shared 1-D domain.
+def _stage_deps(stage: ir.Pattern, names: set) -> Tuple[str, ...]:
+    """Names of the intermediates ``stage`` reads directly."""
+    return tuple(a.src.name for a in stage.accesses
+                 if isinstance(a.src, ir.Tensor) and a.src.name in names)
 
-    ``stages[:-1]`` are producer ``Map``s whose outputs are consumed by
-    later stages as Tensors named after the producing stage;
-    ``stages[-1]`` is the terminal pattern.  Returns the terminal's
-    strip-mined form with every producer attached as a per-tile stage
-    (pattern-valued TileCopy) and intermediate reads rewired in place.
-    Run ``strip_mine.insert_tile_copies`` afterwards to materialize the
-    external tensor tiles.
+
+def fuse_dag_stages(stages: Sequence[ir.Pattern],
+                    terminal_names: Sequence[str],
+                    block: int) -> Dict[str, ir.Pattern]:
+    """Fuse a DAG of untiled patterns over one shared 1-D domain.
+
+    ``stages`` are in topological order; stages whose names are not in
+    ``terminal_names`` are producer ``Map``s whose outputs later stages
+    consume as Tensors named after the producing stage.  Returns one
+    strip-mined pattern per terminal, each carrying the producer stages
+    it (transitively) needs as per-tile pattern-valued TileCopies with
+    intermediate reads rewired in place.  A producer consumed by
+    several stages (fan-out) is lifted exactly once: all its consumers
+    -- across terminals too -- reference the *same* TileCopy (same
+    ``uid``), which is what keeps its VMEM scratch and HBM feeds from
+    being duplicated downstream.  Run ``strip_mine.insert_tile_copies``
+    on each terminal afterwards to materialize the external tensor
+    tiles.
     """
     from .strip_mine import strip_mine  # local import: avoid cycle
 
-    *producers, terminal = stages
+    names = {s.name for s in stages}
+    term_set = set(terminal_names)
+    producers = [s for s in stages if s.name not in term_set]
+    terminals = [s for s in stages if s.name in term_set]
     if any(len(s.domain) != 1 for s in stages):
         raise NotImplementedError("pipeline fusion: 1-D shared domain only")
-    (n,) = terminal.domain
-    if any(s.domain != (n,) for s in producers):
+    (n,) = terminals[-1].domain
+    if any(s.domain != (n,) for s in stages):
         raise ValueError(
             f"pipeline stages must share the streaming domain ({n},): "
             f"{[s.domain for s in stages]}")
@@ -198,10 +219,10 @@ def fuse_pipeline_stages(stages: Sequence[ir.Pattern],
             raise NotImplementedError(
                 f"pipeline producers must be Maps, got {type(s).__name__}")
 
-    outer = strip_mine(terminal, {terminal.name: (block,)})
     stage_tcs: Dict[str, ir.TileCopy] = {}
-    new_loads = []
+    deps: Dict[str, Tuple[str, ...]] = {}
     for s in producers:
+        deps[s.name] = _stage_deps(s, names)
         stage_inner = strip_mine(s, {s.name: (block,)}).inner
         stage_inner = _rewire_intermediates(stage_inner, s, stage_tcs)
         n_out = 1 + len(s.elem_shape)
@@ -213,9 +234,56 @@ def fuse_pipeline_stages(stages: Sequence[ir.Pattern],
             tile_shape=(block,) + tuple(s.elem_shape),
             name=s.name + "_stage")
         stage_tcs[s.name] = tc
-        new_loads.append(tc)
 
-    q2 = _rewire_intermediates(outer.inner, terminal, stage_tcs)
-    return dataclasses.replace(
-        outer, inner=q2,
-        tile_loads=tuple(outer.loads) + tuple(new_loads))
+    def closure(seed: Tuple[str, ...]) -> Tuple[str, ...]:
+        """Transitive producer deps of ``seed``, in stage-lift order."""
+        need = set()
+        frontier = list(seed)
+        while frontier:
+            nm = frontier.pop()
+            if nm in need or nm not in stage_tcs:
+                continue
+            need.add(nm)
+            frontier.extend(deps.get(nm, ()))
+        return tuple(nm for nm in stage_tcs if nm in need)
+
+    out: Dict[str, ir.Pattern] = {}
+    for t in terminals:
+        outer = strip_mine(t, {t.name: (block,)})
+        q2 = _rewire_intermediates(outer.inner, t, stage_tcs)
+        needed = closure(_stage_deps(t, names))
+        out[t.name] = dataclasses.replace(
+            outer, inner=q2,
+            tile_loads=tuple(outer.loads)
+            + tuple(stage_tcs[nm] for nm in needed))
+    return out
+
+
+def fuse_pipeline_stages(stages: Sequence[ir.Pattern],
+                         block: int) -> ir.Pattern:
+    """Fuse a *chain*: ``stages[:-1]`` produce, ``stages[-1]`` is the
+    single terminal.  The chain-shaped front-end over
+    ``fuse_dag_stages`` (PR-2 API, kept for kernels and tests)."""
+    terminal = stages[-1]
+    return fuse_dag_stages(stages, (terminal.name,), block)[terminal.name]
+
+
+# --------------------------------------------------------------------------
+# TileCopy identity across fused terminal trees
+# --------------------------------------------------------------------------
+
+
+def tile_copy_key(tc: ir.TileCopy):
+    """Deduplication key for tile copies of *external tensors*.
+
+    ``insert_tile_copies`` CSEs within one tree, but a DAG pipeline
+    fuses one tree per terminal, so two terminals reading the same
+    tensor tile carry distinct TileCopy objects (distinct uids) for the
+    same DMA.  Copies with equal keys move the same data on the same
+    schedule and collapse to a single BlockSpec operand / VMEM buffer;
+    pattern-valued stages keep uid identity (they are already shared).
+    """
+    if isinstance(tc.src, ir.Tensor) and isinstance(tc.index_map, AffineMap):
+        return ("tensor", tc.src.name, tc.index_map.base, tc.index_map.mat,
+                tuple(tc.tile_shape), tc.hoisted)
+    return ("uid", tc.uid)

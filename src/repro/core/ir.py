@@ -27,10 +27,9 @@ Design notes (see DESIGN.md section 2/3):
 """
 from __future__ import annotations
 
-import dataclasses
 import itertools
-from dataclasses import dataclass, field, replace
-from typing import Any, Callable, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple, Union
 
 import numpy as np
 

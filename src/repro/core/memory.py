@@ -16,11 +16,19 @@ structure, mirroring Table 4 of the paper with TPU-idiomatic targets:
 The pass also checks the total against the VMEM budget -- on the FPGA
 this is BRAM capacity; exceeding it is a compile-time error in both
 worlds.
+
+``plan_memory`` accepts either one tiled pattern or a *sequence* of
+patterns that lower into one kernel (the per-terminal trees of a fused
+pipeline DAG).  Buffers shared between trees -- a fan-out producer's
+stage scratch (same TileCopy uid) or the same external tensor tile
+(same ``fusion.tile_copy_key``) -- are allocated and charged exactly
+once, with their port count reflecting every reader across the whole
+terminal set.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Sequence, Union
 
 import numpy as np
 
@@ -64,25 +72,32 @@ class MemoryPlan:
         return "\n".join(lines)
 
 
-def plan_memory(p: ir.Pattern,
+def plan_memory(p: Union[ir.Pattern, Sequence[ir.Pattern]],
                 vmem_budget_bytes: int = VMEM_BYTES) -> MemoryPlan:
-    buffers: List[BufferAlloc] = []
-    readers: Dict[str, int] = {}
+    from .fusion import tile_copy_key  # local import: avoid cycle
 
-    # count readers of each tile copy (port analysis)
-    for q in ir.walk(p):
-        for a in q.accesses:
-            if isinstance(a.src, ir.TileCopy):
-                readers[a.src.uid] = readers.get(a.src.uid, 0) + 1
+    roots = tuple(p) if isinstance(p, (list, tuple)) else (p,)
+    buffers: List[BufferAlloc] = []
+    readers: Dict = {}
+
+    # count readers of each tile copy (port analysis); fan-out readers
+    # in other terminal trees accumulate onto the same shared buffer
+    for root in roots:
+        for q in ir.walk(root):
+            for a in q.accesses:
+                if isinstance(a.src, ir.TileCopy):
+                    k = tile_copy_key(a.src)
+                    readers[k] = readers.get(k, 0) + 1
 
     seen = set()
     idx = [0]
 
     def visit(q: ir.Pattern, depth: int):
         for tc in q.loads:
-            if tc.uid in seen:
+            k = tile_copy_key(tc)
+            if k in seen:
                 continue
-            seen.add(tc.uid)
+            seen.add(k)
             # a strided pattern's loads are its metapipeline stages:
             # every buffer crossing a stage boundary double-buffers
             # (WAR avoidance between overlapped outer iterations);
@@ -92,7 +107,7 @@ def plan_memory(p: ir.Pattern,
             buffers.append(BufferAlloc(
                 name=f"{tc.name}#{idx[0]}", kind=kind, words=tc.words,
                 dtype=tc.dtype, double_buffered=dbl,
-                ports=readers.get(tc.uid, 1) + 1))
+                ports=readers.get(k, 1) + 1))
             idx[0] += 1
             if isinstance(tc.src, ir.Pattern):
                 visit(tc.src, depth + 1)
@@ -120,5 +135,6 @@ def plan_memory(p: ir.Pattern,
         if q.inner is not None:
             visit(q.inner, depth + 1)
 
-    visit(p, 0)
+    for root in roots:
+        visit(root, 0)
     return MemoryPlan(buffers, vmem_budget_bytes)

@@ -9,43 +9,50 @@ that model: instead of one ``pallas_call`` per pattern with every
 intermediate round-tripping HBM, a :class:`Pipeline` lowers as a single
 megakernel in which producer tiles land in VMEM scratch (double
 buffered per the metapipeline schedule) and are consumed in place --
-only pipeline inputs and the final output touch main memory.
+only pipeline inputs and the final outputs touch main memory.
 
-Structure of a pipeline:
+Structure of a pipeline (a DAG, not just a chain):
 
   * ``stages`` are *untiled* PPL patterns sharing one 1-D streaming
-    domain ``(n,)``; every stage except the last is a producer ``Map``.
-  * A stage reads an earlier stage's output as an ``ir.Tensor`` whose
+    domain ``(n,)``; they may be given in any order -- ``validate``
+    topologically sorts them and rejects cycles.
+  * A stage reads an earlier intermediate as an ``ir.Tensor`` whose
     ``name`` equals the producing stage's ``name`` (a *virtual* tensor:
-    it exists in HBM only on the unfused path).
-  * The last stage is the terminal reduction (``MultiFold`` fold or
-    ``GroupByFold``) and defines the pipeline output.
+    it exists in HBM only on the unfused path).  One intermediate may
+    feed several consumers (fan-out); every non-output stage must be a
+    producer ``Map``.
+  * ``outputs`` names the terminal stages.  When omitted it is inferred
+    as the stages nothing else consumes.  Terminals may be reductions
+    (``MultiFold`` fold / ``GroupByFold``) *or* ``Map``s -- a Map
+    terminal lowers through the write-once streaming template (one
+    output block per grid step, never revisited).
 
-``fuse`` builds the fused tiled IR by strip-mining the terminal and
-attaching each producer as a per-tile stage via
-``fusion.fuse_pipeline_stages`` (the paper's stage-lifting split,
-applied across pattern boundaries), then materializing external tensor
-tiles with ``insert_tile_copies``.  The fused IR is ordinary tiled PPL:
-``cost.traffic`` prices it, ``memory.plan_memory`` checks VMEM (stage
-buffers double-buffered), ``scheduling.build_schedule`` derives the
-metapipeline, ``codegen_jax.execute`` is the oracle, and
-``codegen_pallas.lower_fused_chain`` emits the megakernel.
+``fuse_dag`` builds the fused tiled IR: each terminal is strip-mined
+onto the shared strided outer and every producer becomes a per-tile
+stage via ``fusion.fuse_dag_stages`` -- a fan-out producer is lifted
+*exactly once* and its single ``TileCopy`` (stable ``uid``) is shared
+by all consumers, so neither its VMEM scratch nor the HBM tiles feeding
+it are duplicated.  Each terminal's fused form is ordinary tiled PPL:
+``codegen_jax.execute`` is the oracle per terminal,
+``memory.plan_memory`` accepts the whole terminal set (shared buffers
+counted once), and ``codegen_pallas.lower_fused_dag`` emits the single
+multi-output megakernel.
 
-Joint tile-size selection for a pipeline lives in
-``dse.explore_pipeline`` (one shared tile per streaming domain, priced
-on the fused kernel, cached on the whole pipeline signature, with a
-split fallback at the cheapest cut when no fused candidate fits VMEM).
+Joint tile-size selection lives in ``dse.explore_pipeline`` (priced on
+the fused DAG, per-group block sizes on the split-fallback path, cached
+on a topological DAG signature).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from . import ir
+from .affine import AffineMap
 from .cost import VMEM_BYTES, traffic
-from .fusion import fuse_pipeline_stages
+from .fusion import fuse_dag_stages, tile_copy_key
 from .memory import plan_memory
 from .scheduling import Metapipeline, build_schedule
 from .strip_mine import insert_tile_copies
@@ -53,79 +60,232 @@ from .strip_mine import insert_tile_copies
 
 @dataclasses.dataclass(frozen=True)
 class Pipeline:
-    """A chain of untiled patterns over one shared streaming domain."""
+    """A DAG of untiled patterns over one shared streaming domain.
+
+    ``outputs=()`` infers the terminal set: every stage no other stage
+    consumes.  Chains need no change -- the last stage is the single
+    inferred output.
+    """
 
     name: str
     stages: Tuple[ir.Pattern, ...]
+    outputs: Tuple[str, ...] = ()
 
     def __post_init__(self):
         validate(self)
 
     @property
     def terminal(self) -> ir.Pattern:
-        return self.stages[-1]
+        """The single terminal (chains); raises on multi-output DAGs."""
+        outs = output_names(self)
+        if len(outs) != 1:
+            raise ValueError(
+                f"pipeline '{self.name}' has {len(outs)} outputs {outs}; "
+                "use output_names/terminals")
+        return stage_map(self)[outs[0]]
+
+    @property
+    def terminals(self) -> Tuple[ir.Pattern, ...]:
+        sm = stage_map(self)
+        return tuple(sm[n] for n in output_names(self))
 
     @property
     def shared_extent(self) -> int:
-        return self.stages[-1].domain[0]
+        return self.stages[0].domain[0]
 
     @property
     def dtype(self) -> str:
-        return self.terminal.dtype
+        return self.terminals[0].dtype
+
+
+# --------------------------------------------------------------------------
+# DAG structure helpers
+# --------------------------------------------------------------------------
+
+
+def stage_map(pipe: Pipeline) -> Dict[str, ir.Pattern]:
+    return {s.name: s for s in pipe.stages}
+
+
+def _edges(pipe: Pipeline) -> Tuple[Tuple[str, str], ...]:
+    """(producer, consumer) name pairs: every read of a stage-named
+    Tensor is intermediate wiring."""
+    names = {s.name for s in pipe.stages}
+    out = []
+    for s in pipe.stages:
+        for a in s.accesses:
+            if isinstance(a.src, ir.Tensor) and a.src.name in names:
+                out.append((a.src.name, s.name))
+    return tuple(out)
+
+
+def consumers(pipe: Pipeline) -> Dict[str, Tuple[str, ...]]:
+    """Stage name -> names of the stages that read its output."""
+    by_prod: Dict[str, List[str]] = {s.name: [] for s in pipe.stages}
+    for prod, cons in _edges(pipe):
+        if cons not in by_prod[prod]:
+            by_prod[prod].append(cons)
+    return {k: tuple(v) for k, v in by_prod.items()}
+
+
+def output_names(pipe: Pipeline) -> Tuple[str, ...]:
+    if pipe.outputs:
+        return tuple(pipe.outputs)
+    cons = consumers(pipe)
+    return tuple(s.name for s in topo_stages(pipe) if not cons[s.name])
+
+
+def topo_stages(pipe: Pipeline) -> Tuple[ir.Pattern, ...]:
+    """Stages in canonical topological order (Kahn's algorithm, stage
+    name as the deterministic tiebreak so the order -- and therefore the
+    DSE cache signature -- is independent of the declaration order).
+    Raises ValueError on a dependency cycle."""
+    sm = stage_map(pipe)
+    indeg = {n: 0 for n in sm}
+    succ: Dict[str, List[str]] = {n: [] for n in sm}
+    for prod, cons in set(_edges(pipe)):
+        indeg[cons] += 1
+        succ[prod].append(cons)
+    ready = sorted(n for n, d in indeg.items() if d == 0)
+    order: List[str] = []
+    while ready:
+        n = ready.pop(0)
+        order.append(n)
+        newly = []
+        for m in succ[n]:
+            indeg[m] -= 1
+            if indeg[m] == 0:
+                newly.append(m)
+        ready = sorted(ready + newly)
+    if len(order) != len(sm):
+        stuck = sorted(n for n, d in indeg.items() if d > 0)
+        raise ValueError(
+            f"pipeline '{pipe.name}' has a dependency cycle through "
+            f"stages {stuck}")
+    return tuple(sm[n] for n in order)
 
 
 def intermediate_names(pipe: Pipeline) -> Tuple[str, ...]:
-    """Stage names, i.e. the virtual tensors produced inside the chain."""
-    return tuple(s.name for s in pipe.stages[:-1])
+    """Non-output stage names, i.e. the virtual tensors produced and
+    consumed inside the DAG (topological order)."""
+    outs = set(output_names(pipe))
+    return tuple(s.name for s in topo_stages(pipe) if s.name not in outs)
 
 
 def intermediate_words(pipe: Pipeline) -> Dict[str, int]:
-    return {s.name: int(np.prod(s.shape)) for s in pipe.stages[:-1]}
+    sm = stage_map(pipe)
+    return {n: int(np.prod(sm[n].shape)) for n in intermediate_names(pipe)}
 
 
 def external_inputs(pipe: Pipeline) -> Tuple[ir.Tensor, ...]:
     """Main-memory tensors read by any stage, minus the intermediates."""
-    inter = set(intermediate_names(pipe))
+    names = {s.name for s in pipe.stages}
     seen: Dict[str, ir.Tensor] = {}
     for s in pipe.stages:
         for t in ir.inputs_of(s):
-            if t.name not in inter:
+            if t.name not in names:
                 seen.setdefault(t.name, t)
     return tuple(seen.values())
 
 
 def output_words(pipe: Pipeline) -> int:
-    return int(np.prod(pipe.terminal.shape)) if pipe.terminal.shape else 1
+    """Total words written to main memory for the pipeline outputs."""
+    total = 0
+    for t in pipe.terminals:
+        total += int(np.prod(t.shape)) if t.shape else 1
+    return total
+
+
+def _is_stream_row_access(a: ir.Access, domain_rank: int) -> bool:
+    """True iff the access reads the *current* row along the shared
+    streaming domain (base 0, dim 0 advancing 1:1 with the index)."""
+    try:
+        amap = AffineMap.probe(a.index_map, domain_rank)
+    except Exception:
+        return False
+    if amap.n_out == 0:
+        return False
+    row_col = (1,) + (0,) * (amap.n_out - 1)
+    return amap.base == (0,) * amap.n_out and amap.col(0) == row_col
 
 
 def validate(pipe: Pipeline) -> None:
     if not pipe.stages:
         raise ValueError("empty pipeline")
-    (n,) = pipe.stages[-1].domain
     names = set()
+    for s in pipe.stages:
+        if s.name in names:
+            raise ValueError(f"duplicate stage name '{s.name}'")
+        names.add(s.name)
+    if len(pipe.stages[0].domain) != 1:
+        raise ValueError(
+            "pipeline stages need a 1-D streaming domain, got "
+            f"{pipe.stages[0].domain}")
+    (n,) = pipe.stages[0].domain
     for s in pipe.stages:
         if tuple(s.domain) != (n,):
             raise ValueError(
                 f"stage '{s.name}' domain {s.domain} != shared ({n},)")
         if s.strided or s.loads:
             raise ValueError(f"stage '{s.name}' must be untiled")
-        if s.name in names:
-            raise ValueError(f"duplicate stage name '{s.name}'")
-        names.add(s.name)
-    for s in pipe.stages[:-1]:
-        if not isinstance(s, ir.Map):
-            raise NotImplementedError(
-                f"producer stage '{s.name}' must be a Map")
-    # wiring: a stage may only read intermediates produced *before* it
-    produced: set = set()
+
+    # wiring: reads of stage-named Tensors must match the producer's
+    # realized shape exactly (fan-out into a differently-shaped view
+    # would silently read garbage on the fused path)
+    sm = stage_map(pipe)
     for s in pipe.stages:
         for a in s.accesses:
             if isinstance(a.src, ir.Tensor) and a.src.name in names:
-                if a.src.name not in produced:
+                prod = sm[a.src.name]
+                if tuple(a.src.shape) != tuple(prod.shape):
                     raise ValueError(
-                        f"stage '{s.name}' reads '{a.src.name}' before "
-                        f"it is produced")
-        produced.add(s.name)
+                        f"stage '{s.name}' reads intermediate "
+                        f"'{a.src.name}' with mismatched extents "
+                        f"{tuple(a.src.shape)}; stage '{prod.name}' "
+                        f"produces {tuple(prod.shape)}")
+
+    # explicit outputs must name stages
+    for o in pipe.outputs:
+        if o not in names:
+            raise ValueError(
+                f"pipeline '{pipe.name}' output '{o}' names no stage")
+
+    topo = topo_stages(pipe)  # raises on cycles
+    cons = consumers(pipe)
+    outs = output_names(pipe)
+    if pipe.outputs:
+        for s in topo:
+            if s.name not in set(outs) and not cons[s.name]:
+                raise ValueError(
+                    f"dangling intermediate '{s.name}': produced but "
+                    "never consumed and not a pipeline output")
+        for o in outs:
+            if cons[o]:
+                raise NotImplementedError(
+                    f"output stage '{o}' is also consumed by "
+                    f"{list(cons[o])}; a stage cannot be both a "
+                    "terminal and an intermediate")
+
+    # producers (non-terminal stages) must be Maps
+    for s in topo:
+        if s.name not in set(outs) and not isinstance(s, ir.Map):
+            raise NotImplementedError(
+                f"producer stage '{s.name}' must be a Map")
+
+    # a Map terminal streams one write-once output block per grid step;
+    # a non-current-row read of an intermediate would force the outer to
+    # revisit earlier tiles, which the template cannot do
+    for o in outs:
+        t = sm[o]
+        if not isinstance(t, ir.Map):
+            continue
+        for a in t.accesses:
+            if isinstance(a.src, ir.Tensor) and a.src.name in names \
+                    and not _is_stream_row_access(a, 1):
+                raise ValueError(
+                    f"Map terminal '{t.name}' would need a revisited "
+                    f"outer: its read of intermediate '{a.src.name}' is "
+                    "not the current streamed row")
 
 
 # --------------------------------------------------------------------------
@@ -133,23 +293,72 @@ def validate(pipe: Pipeline) -> None:
 # --------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class FusedDag:
+    """The fused form of a pipeline DAG at one streaming tile size.
+
+    ``terminals`` pairs each output name with its fused tiled pattern
+    (a 1-D strided outer whose producer stages are pattern-valued
+    TileCopies).  The per-terminal patterns *share* producer TileCopies
+    by ``uid`` -- that sharing is the fan-out contract: one VMEM
+    scratch buffer and one set of HBM feeds per producer, regardless of
+    how many consumers it has.  ``refcounts`` records the consumer
+    count per producer stage.
+    """
+
+    name: str
+    block: int
+    grid: int
+    terminals: Tuple[Tuple[str, ir.Pattern], ...]
+    refcounts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def patterns(self) -> Tuple[ir.Pattern, ...]:
+        return tuple(p for _, p in self.terminals)
+
+
+def fuse_dag(pipe: Pipeline, block: int, *,
+             vmem_budget_words: int = VMEM_BYTES // 4) -> FusedDag:
+    """The whole DAG as per-terminal tiled patterns sharing producer
+    stages: producers are VMEM-resident per-tile stages (one TileCopy
+    per producer, ref-counted across consumers), and only external
+    tensors get (HBM -> VMEM) tile copies."""
+    topo = topo_stages(pipe)
+    outs = output_names(pipe)
+    fused_by_name = fuse_dag_stages(topo, outs, block)
+    terminals = []
+    for o in outs:
+        t = insert_tile_copies(fused_by_name[o],
+                               vmem_budget_words=vmem_budget_words)
+        terminals.append((o, t))
+    cons = consumers(pipe)
+    refcounts = {n: len(cons[n]) for n in intermediate_names(pipe)}
+    return FusedDag(name=pipe.name, block=block,
+                    grid=pipe.shared_extent // block,
+                    terminals=tuple(terminals), refcounts=refcounts)
+
+
 def fuse(pipe: Pipeline, block: int, *,
          vmem_budget_words: int = VMEM_BYTES // 4) -> ir.Pattern:
-    """The whole chain as one tiled pattern: producers are VMEM-resident
-    per-tile stages, only external tensors get (HBM -> VMEM) tile
-    copies."""
-    fused = fuse_pipeline_stages(pipe.stages, block)
-    return insert_tile_copies(fused, vmem_budget_words=vmem_budget_words)
+    """Single-output convenience: the fused DAG's one terminal pattern
+    (back-compat with the PR-2 chain API)."""
+    fdag = fuse_dag(pipe, block, vmem_budget_words=vmem_budget_words)
+    if len(fdag.terminals) != 1:
+        raise ValueError(
+            f"pipeline '{pipe.name}' has multiple outputs "
+            f"{output_names(pipe)}; use fuse_dag")
+    return fdag.terminals[0][1]
 
 
 def schedule(pipe: Pipeline, block: int, *,
              vmem_budget_words: int = VMEM_BYTES // 4
              ) -> Optional[Metapipeline]:
-    """Metapipeline schedule of the fused kernel: every producer stage
-    and tile load crossing a stage boundary is double-buffered."""
-    return build_schedule(fuse(pipe, block,
-                               vmem_budget_words=vmem_budget_words),
-                          vmem_budget_words)
+    """Metapipeline schedule of the fused kernel (the first terminal's
+    tree -- producer stages and boundary-crossing loads all
+    double-buffered; shared stages appear identically in every
+    terminal's schedule)."""
+    fdag = fuse_dag(pipe, block, vmem_budget_words=vmem_budget_words)
+    return build_schedule(fdag.terminals[0][1], vmem_budget_words)
 
 
 # --------------------------------------------------------------------------
@@ -157,25 +366,32 @@ def schedule(pipe: Pipeline, block: int, *,
 # --------------------------------------------------------------------------
 
 
+def _as_output(pipe: Pipeline, env: Dict[str, Any]):
+    outs = output_names(pipe)
+    if len(outs) == 1:
+        return env[outs[0]]
+    return {n: env[n] for n in outs}
+
+
 def run_unfused(pipe: Pipeline, inputs: Dict[str, Any],
                 *, return_intermediates: bool = False):
-    """Execute stage-by-stage through the ``codegen_jax`` oracle,
-    materializing every intermediate (the pre-fusion lowering: one
-    kernel per pattern, intermediates round-trip HBM)."""
+    """Execute stage-by-stage (topological order) through the
+    ``codegen_jax`` oracle, materializing every intermediate (the
+    pre-fusion lowering: one kernel per pattern, intermediates
+    round-trip HBM).  Multi-output DAGs return a name -> array dict."""
     from .codegen_jax import execute  # local import: avoid cycle
 
     env = dict(inputs)
-    out = None
-    for s in pipe.stages:
-        out = execute(s, env)
-        env[s.name] = out
+    for s in topo_stages(pipe):
+        env[s.name] = execute(s, env)
+    out = _as_output(pipe, env)
     if return_intermediates:
         return out, {k: env[k] for k in intermediate_names(pipe)}
     return out
 
 
 def unfused_runner(pipe: Pipeline) -> Callable:
-    """A jitted closure over the unfused stage chain (inputs as kwargs)."""
+    """A jitted closure over the unfused stage DAG (inputs as kwargs)."""
     import jax
 
     @jax.jit
@@ -193,7 +409,8 @@ def unfused_runner(pipe: Pipeline) -> Callable:
 def unfused_traffic_words(pipe: Pipeline) -> int:
     """Total HBM words moved by the per-pattern lowering: every stage's
     main-memory reads (intermediates included -- they are real tensors
-    on this path) plus every intermediate write plus the output write."""
+    on this path, and a fan-out intermediate is read once per consumer)
+    plus every intermediate write plus the output writes."""
     words = 0
     for s in pipe.stages:
         words += traffic(s).total_reads
@@ -202,21 +419,88 @@ def unfused_traffic_words(pipe: Pipeline) -> int:
     return int(words)
 
 
+def dag_external_reads(fdag: FusedDag) -> Dict[str, int]:
+    """HBM words read per external tensor by the fused megakernel.
+
+    Every tensor tile copy hangs off the shared 1-D strided outer, so a
+    non-hoisted copy streams once per grid step and a hoisted copy is
+    the Pipe-0 preload (loaded once).  Copies are deduplicated across
+    terminals by ``fusion.tile_copy_key`` -- the kernel issues one DMA
+    per distinct (tensor, index map, tile) regardless of how many
+    terminal trees reference it -- and producer stages contribute
+    nothing (they are VMEM-resident).
+    """
+    reads: Dict[str, int] = {}
+    seen = set()
+    for _, t in fdag.terminals:
+        tree_tc: Dict[str, int] = {}   # this tree's copy words, undeduped
+        streamed = set()
+        for node in ir.walk(t):
+            for tc in node.loads:
+                if not isinstance(tc.src, ir.Tensor):
+                    continue
+                trips = 1 if tc.hoisted else fdag.grid
+                words = trips * tc.words // tc.reuse
+                tree_tc[tc.src.name] = (tree_tc.get(tc.src.name, 0)
+                                        + words)
+                key = tile_copy_key(tc)
+                if key in seen:
+                    continue
+                seen.add(key)
+                reads[tc.src.name] = reads.get(tc.src.name, 0) + words
+            for a in node.accesses:
+                if isinstance(a.src, ir.Tensor) and a.affine:
+                    streamed.add(a.src.name)
+        if streamed:
+            # direct affine tensor reads left in place are the
+            # streaming fallback (tile too big for VMEM): charge, once
+            # per tree, whatever cost.traffic attributes to the tensor
+            # beyond its tile copies (no cross-terminal CSE exists for
+            # streamed reads)
+            tr = traffic(t)
+            for name in streamed:
+                extra = tr.reads.get(name, 0) - tree_tc.get(name, 0)
+                reads[name] = reads.get(name, 0) + max(extra, 0)
+    return reads
+
+
 def fused_traffic_words(pipe: Pipeline, block: int, *,
                         vmem_budget_words: int = VMEM_BYTES // 4) -> int:
     """Total HBM words moved by the fused megakernel: external reads of
-    the fused IR (intermediates are VMEM-resident, contributing zero)
-    plus the output write."""
-    fused = fuse(pipe, block, vmem_budget_words=vmem_budget_words)
-    return int(traffic(fused).total_reads) + output_words(pipe)
+    the fused DAG (intermediates are VMEM-resident, contributing zero;
+    fan-out tiles counted once) plus the output writes."""
+    fdag = fuse_dag(pipe, block, vmem_budget_words=vmem_budget_words)
+    return int(sum(dag_external_reads(fdag).values())) + output_words(pipe)
 
 
 def fused_memory_plan(pipe: Pipeline, block: int, *,
                       vmem_budget_bytes: int = VMEM_BYTES):
-    """VMEM plan of the fused kernel (stage scratch double-buffered)."""
-    fused = fuse(pipe, block,
-                 vmem_budget_words=vmem_budget_bytes // 4)
-    return plan_memory(fused, vmem_budget_bytes=vmem_budget_bytes)
+    """VMEM plan of the fused kernel across the whole terminal set
+    (stage scratch double-buffered; fan-out scratch counted once)."""
+    fdag = fuse_dag(pipe, block,
+                    vmem_budget_words=vmem_budget_bytes // 4)
+    return plan_memory(fdag.patterns, vmem_budget_bytes=vmem_budget_bytes)
+
+
+# --------------------------------------------------------------------------
+# Split-fallback support: contiguous topological sub-pipelines
+# --------------------------------------------------------------------------
+
+
+def sub_pipeline(pipe: Pipeline, i0: int, i1: int) -> Pipeline:
+    """Stages ``topo[i0:i1]`` as their own pipeline.  Its outputs are
+    the range's pipeline outputs plus every stage consumed outside the
+    range (those intermediates round-trip HBM at the group boundary)."""
+    topo = topo_stages(pipe)
+    chosen = topo[i0:i1]
+    inside = {s.name for s in chosen}
+    pipe_outs = set(output_names(pipe))
+    cons = consumers(pipe)
+    outs = tuple(s.name for s in chosen
+                 if s.name in pipe_outs
+                 or any(c not in inside for c in cons[s.name]))
+    return Pipeline(name=f"{pipe.name}:{chosen[0].name}",
+                    stages=chosen, outputs=outs)
 
 
 # --------------------------------------------------------------------------
@@ -231,8 +515,9 @@ def lower_pipeline(pipe: Pipeline, *, fused: bool = True, plan=None,
 
     ``fused=True`` (default) runs joint DSE and emits the single-kernel
     Pallas lowering (``codegen_pallas.lower_fused_pipeline``);
-    ``fused=False`` returns the per-stage oracle chain -- the
-    pre-fusion semantics every fused kernel is validated against.
+    ``fused=False`` returns the per-stage oracle DAG -- the pre-fusion
+    semantics every fused kernel is validated against.  Multi-output
+    pipelines return a name -> array dict either way.
     """
     if not fused:
         return unfused_runner(pipe)

@@ -15,7 +15,7 @@ property real deployments get from deterministic tfrecord sharding.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

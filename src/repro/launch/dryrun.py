@@ -21,10 +21,9 @@ import json
 import re
 import sys
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, get_config, skip_reason

@@ -7,7 +7,7 @@ DCN dimension and composes with "data" for gradient reduction.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Sequence
 
 import jax
 

@@ -19,7 +19,7 @@ dim over ("pod","data") when divisible.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
@@ -146,7 +146,6 @@ def opt_state_sharding(cfg: ModelConfig, mesh: Mesh, param_specs,
                     break
         return NamedSharding(mesh, P(*parts))
 
-    import jax.tree_util as jtu
     from repro.optim.adamw import AdamWState
 
     def map_tree(tree):

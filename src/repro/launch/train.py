@@ -17,7 +17,6 @@ import time
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import manager as ckpt

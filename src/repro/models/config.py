@@ -3,7 +3,7 @@ families (dense / ssm / hybrid / moe / audio / vlm backbones)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,7 +7,7 @@ in the lowered HLO.  Each application keeps its own KV cache slot.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ top-1, every other layer, + shared expert).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ recurrent single-step form used for decode, plus the block plumbing
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

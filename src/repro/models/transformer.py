@@ -15,12 +15,10 @@ consumed by ``jax.lax.scan`` so the lowered HLO stays small for 80-layer
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import layers as L
 from . import moe as moe_mod

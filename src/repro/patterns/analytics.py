@@ -13,7 +13,6 @@ feed ``repro.core.tile`` for the tiled/metapipelined configurations.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -217,12 +216,14 @@ SUITE = {
 
 
 # ==========================================================================
-# Pipelines: the same benchmarks in the paper's *composed* form -- a chain
+# Pipelines: the same benchmarks in the paper's *composed* form -- a DAG
 # of whole patterns wired through named intermediates.  These are the
 # programs pipeline fusion lowers as single megakernels (the ``fused=True``
 # path via ``core.pipeline.lower_pipeline``); unfused, every intermediate
 # round-trips HBM, which is exactly the traffic the fused lowering deletes.
-# Each builder returns ``(Pipeline, make_inputs, reference)``.
+# Each builder returns ``(Pipeline, make_inputs, reference)``; for
+# multi-output DAGs ``reference`` returns a name -> array dict matching
+# ``core.pipeline.output_names``.
 # ==========================================================================
 
 
@@ -285,10 +286,13 @@ def gda_pipeline(n=512, d=8, k=4):
 
 
 def kmeans_pipeline(n=256, k=8, d=16):
-    """kmeans step as assign -> scatter: a Map computing each point's
-    nearest centroid (the (n,) assignment intermediate), then the
-    per-cluster sum+count scatter.  The centroids read is loop-invariant
-    and becomes the fused kernel's Pipe-0 preload."""
+    """kmeans step in true DAG form: the assign Map (each point's
+    nearest centroid, the (n,) fan-out intermediate) feeds BOTH the
+    per-cluster scatter-sum and the per-cluster count -- two terminal
+    keyed folds sharing one producer.  Fused, the assignment is
+    computed once per tile into one VMEM stage buffer read by both
+    terminals, and the points tile is DMA'd once per outer step; the
+    centroids read is loop-invariant and becomes the Pipe-0 preload."""
     from repro.core.pipeline import Pipeline
 
     pts = ir.Tensor("points", (n, d))
@@ -304,19 +308,126 @@ def kmeans_pipeline(n=256, k=8, d=16):
                ir.Access(pts, lambda i: (i, 0), (1, d))),
         fn=assign_fn, name="km_assign")
 
-    def scatter_fn(s, a, p_row):
-        return a.astype(jnp.int32), jnp.concatenate(
-            [p_row, jnp.ones((1,))])
-
-    scatter = ir.GroupByFold(
-        domain=(n,), num_keys=k, elem_shape=(d + 1,),
-        init=lambda: jnp.zeros((k, d + 1)),
+    sums = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(d,),
+        init=lambda: jnp.zeros((k, d)),
         reads=(ir.elem(ir.Tensor("km_assign", (n,))),
                ir.Access(pts, lambda i: (i, 0), (1, d))),
-        fn=scatter_fn, combine=lambda a, b: a + b, name="km_scatter")
+        fn=lambda s, a, p_row: (a.astype(jnp.int32), p_row),
+        combine=lambda a, b: a + b, name="km_sums")
 
-    _, _, make_inputs, reference = kmeans(n, k, d)
-    return Pipeline(name="kmeans", stages=(assign, scatter)), \
+    counts = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(),
+        init=lambda: jnp.zeros((k,)),
+        reads=(ir.elem(ir.Tensor("km_assign", (n,))),),
+        fn=lambda s, a: (a.astype(jnp.int32), jnp.float32(1.0)),
+        combine=lambda a, b: a + b, name="km_counts")
+
+    _, _, make_inputs, _ = kmeans(n, k, d)
+
+    def reference(inp):
+        pts_ = np.asarray(inp["points"])
+        cents_ = np.asarray(inp["centroids"])
+        d2 = ((pts_[:, None] - cents_[None]) ** 2).sum(-1)
+        idx = d2.argmin(1)
+        sums_ = np.zeros((k, d), np.float32)
+        counts_ = np.zeros((k,), np.float32)
+        for i in range(n):
+            sums_[idx[i]] += pts_[i]
+            counts_[idx[i]] += 1
+        return {"km_sums": sums_, "km_counts": counts_}
+
+    return Pipeline(name="kmeans", stages=(assign, sums, counts)), \
+        make_inputs, reference
+
+
+def gda_moments_pipeline(n=512, d=8, k=4):
+    """gda first/second moments as a DAG over one shared feature map:
+    a weighted feature Map (the (n, d) fan-out intermediate) feeds BOTH
+    the per-class mean accumulator and the per-class second-moment
+    (variance numerator) accumulator.  The labels tile is read by both
+    terminals but DMA'd once; the weight vector is a Pipe-0 preload."""
+    from repro.core.pipeline import Pipeline
+
+    pts = ir.Tensor("pts", (n, d))
+    labels = ir.Tensor("labels", (n,))
+    weight = ir.Tensor("weight", (d,))
+
+    feat = ir.Map(
+        domain=(n,), elem_shape=(d,),
+        reads=(ir.Access(pts, lambda i: (i, 0), (1, d)),
+               ir.whole(weight)),
+        fn=lambda s, row, w: row * w, name="gdam_feat")
+
+    mean = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(d,),
+        init=lambda: jnp.zeros((k, d)),
+        reads=(ir.elem(labels),
+               ir.Access(ir.Tensor("gdam_feat", (n, d)),
+                         lambda i: (i, 0), (1, d))),
+        fn=lambda s, lab, f: (lab.astype(jnp.int32), f),
+        combine=lambda a, b: a + b, name="gdam_mean")
+
+    var = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(d,),
+        init=lambda: jnp.zeros((k, d)),
+        reads=(ir.elem(labels),
+               ir.Access(ir.Tensor("gdam_feat", (n, d)),
+                         lambda i: (i, 0), (1, d))),
+        fn=lambda s, lab, f: (lab.astype(jnp.int32), f * f),
+        combine=lambda a, b: a + b, name="gdam_var")
+
+    def make_inputs():
+        r = np.random.RandomState(9)
+        return {"pts": r.randn(n, d).astype(np.float32),
+                "labels": r.randint(0, k, n).astype(np.float32),
+                "weight": (r.rand(d) + 0.5).astype(np.float32)}
+
+    def reference(inp):
+        f = np.asarray(inp["pts"]) * np.asarray(inp["weight"])[None, :]
+        lab = np.asarray(inp["labels"]).astype(np.int32)
+        mean_ = np.zeros((k, d), np.float32)
+        var_ = np.zeros((k, d), np.float32)
+        for i in range(n):
+            mean_[lab[i]] += f[i]
+            var_[lab[i]] += f[i] * f[i]
+        return {"gdam_mean": mean_, "gdam_var": var_}
+
+    return Pipeline(name="gda_moments", stages=(feat, mean, var)), \
+        make_inputs, reference
+
+
+def normalize_pipeline(n=256, d=16):
+    """L2 row normalization as map -> map: an inverse-norm Map (the
+    (n,) intermediate) feeding a *Map terminal* that rescales each row.
+    The terminal lowers through the write-once streaming template (one
+    (b, d) output block per grid step, no revisited accumulator); the
+    x tile feeds both stages through a single DMA."""
+    from repro.core.pipeline import Pipeline
+
+    x = ir.Tensor("x", (n, d))
+    eps = 1e-6
+
+    inv = ir.Map(
+        domain=(n,),
+        reads=(ir.Access(x, lambda i: (i, 0), (1, d)),),
+        fn=lambda s, row: 1.0 / jnp.sqrt(jnp.sum(row * row) + eps),
+        name="nrm_inv")
+
+    scale = ir.Map(
+        domain=(n,), elem_shape=(d,),
+        reads=(ir.elem(ir.Tensor("nrm_inv", (n,))),
+               ir.Access(x, lambda i: (i, 0), (1, d))),
+        fn=lambda s, r, row: row * r, name="nrm_out")
+
+    def make_inputs():
+        return {"x": _rng(10, n, d)}
+
+    def reference(inp):
+        xs = np.asarray(inp["x"])
+        return xs / np.sqrt((xs * xs).sum(1, keepdims=True) + eps)
+
+    return Pipeline(name="normalize", stages=(inv, scale)), \
         make_inputs, reference
 
 
@@ -324,4 +435,6 @@ PIPELINES = {
     "tpchq6": tpchq6_pipeline,
     "gda": gda_pipeline,
     "kmeans": kmeans_pipeline,
+    "gda_moments": gda_moments_pipeline,
+    "normalize": normalize_pipeline,
 }

@@ -1,0 +1,190 @@
+"""benchmarks/check_regression.py (the CI perf-regression gate) and the
+benchmarks/run.py --json robustness bugfix.
+
+The gate must demonstrably fail on a synthetic 10% modeled-traffic
+regression (ISSUE-3 acceptance) and pass when fresh numbers match the
+committed baseline; run.py --json must produce a valid document even
+when no rows were emitted or a section died mid-run.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import check_regression as cr  # noqa: E402
+
+
+BASE = {
+    "tpchq6": {"fused": 12289, "unfused": 20481, "ratio": 1.67},
+    "kmeans": {"fused": 4360, "unfused": 9224, "ratio": 2.12},
+}
+
+
+def _rows(fused_by_name):
+    rows = []
+    for name, (fused, unfused, ratio) in fused_by_name.items():
+        rows += [
+            {"section": "fused", "name": f"fused/{name}/fused",
+             "traffic_words": fused},
+            {"section": "fused", "name": f"fused/{name}/unfused",
+             "traffic_words": unfused},
+            {"section": "fused", "name": f"fused/{name}/traffic_ratio",
+             "traffic_ratio": ratio},
+        ]
+    return rows
+
+
+def test_gate_passes_when_unchanged():
+    fresh = cr.extract_traffic(_rows({
+        "tpchq6": (12289, 20481, 1.67), "kmeans": (4360, 9224, 2.12)}))
+    failures, notes = cr.compare(BASE, fresh)
+    assert failures == [] and notes == []
+
+
+def test_gate_fails_on_10pct_traffic_regression():
+    fresh = cr.extract_traffic(_rows({
+        "tpchq6": (int(12289 * 1.10), 20481, 1.52),    # +10% fused words
+        "kmeans": (4360, 9224, 2.12)}))
+    failures, _ = cr.compare(BASE, fresh, tolerance=0.05)
+    assert any("tpchq6" in f and "regressed" in f for f in failures)
+
+
+def test_gate_allows_within_tolerance():
+    fresh = cr.extract_traffic(_rows({
+        "tpchq6": (int(12289 * 1.04), 20481, 1.67),    # +4% < 5%
+        "kmeans": (4360, 9224, 2.12)}))
+    failures, _ = cr.compare(BASE, fresh, tolerance=0.05)
+    assert failures == []
+
+
+def test_gate_fails_on_ratio_erosion():
+    fresh = cr.extract_traffic(_rows({
+        "tpchq6": (12289, 13000, 1.06),   # fused flat, win collapsed
+        "kmeans": (4360, 9224, 2.12)}))
+    failures, _ = cr.compare(BASE, fresh)
+    assert any("win eroded" in f for f in failures)
+
+
+def test_gate_fails_on_missing_pipeline():
+    fresh = cr.extract_traffic(_rows({"kmeans": (4360, 9224, 2.12)}))
+    failures, _ = cr.compare(BASE, fresh)
+    assert any("missing" in f for f in failures)
+
+
+def test_gate_notes_new_pipeline_without_failing():
+    fresh = cr.extract_traffic(_rows({
+        "tpchq6": (12289, 20481, 1.67), "kmeans": (4360, 9224, 2.12),
+        "brand_new": (1, 2, 2.0)}))
+    failures, notes = cr.compare(BASE, fresh)
+    assert failures == []
+    assert any("brand_new" in n for n in notes)
+
+
+def test_cli_exit_codes(tmp_path):
+    bench = tmp_path / "BENCH_x.json"
+    bench.write_text(json.dumps({"rev": "x", "rows": _rows({
+        "tpchq6": (12289, 20481, 1.67),
+        "kmeans": (4360, 9224, 2.12)})}))
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({"pipelines": BASE}))
+    assert cr.main(["--bench", str(bench),
+                    "--baseline", str(baseline)]) == 0
+    bad = tmp_path / "BENCH_y.json"
+    bad.write_text(json.dumps({"rev": "y", "rows": _rows({
+        "tpchq6": (int(12289 * 1.10), 20481, 1.52),
+        "kmeans": (4360, 9224, 2.12)})}))
+    assert cr.main(["--bench", str(bad),
+                    "--baseline", str(baseline)]) == 1
+
+
+def test_cli_picks_newest_bench_by_mtime(tmp_path):
+    old = tmp_path / "BENCH_zzz.json"   # name sorts LAST, mtime oldest
+    old.write_text(json.dumps({"rows": _rows({
+        "tpchq6": (99999, 1, 1.0)})}))
+    os.utime(old, (1, 1))
+    new = tmp_path / "BENCH_aaa.json"
+    new.write_text(json.dumps({"rows": _rows({
+        "tpchq6": (12289, 20481, 1.67),
+        "kmeans": (4360, 9224, 2.12)})}))
+    rows = cr.load_rows(str(tmp_path / "BENCH_*.json"))
+    assert cr.extract_traffic(rows)["tpchq6"]["fused"] == 12289
+
+
+def test_cli_refuses_crashed_bench_doc(tmp_path):
+    """A BENCH json carrying run.py's mid-crash 'error' field has
+    partial rows: the gate must refuse it, and --write-baseline must
+    not silently shrink the gated pipeline set from it."""
+    crashed = tmp_path / "BENCH_c.json"
+    crashed.write_text(json.dumps({
+        "rev": "c", "error": "RuntimeError: section exploded",
+        "rows": _rows({"tpchq6": (12289, 20481, 1.67)})}))
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({"pipelines": BASE}))
+    assert cr.main(["--bench", str(crashed),
+                    "--baseline", str(baseline)]) == 1
+    out = tmp_path / "new_baseline.json"
+    assert cr.main(["--bench", str(crashed),
+                    "--write-baseline", str(out)]) == 1
+    assert not out.exists()
+
+
+def test_write_baseline_roundtrip(tmp_path):
+    bench = tmp_path / "BENCH_x.json"
+    bench.write_text(json.dumps({"rev": "x", "rows": _rows({
+        "tpchq6": (12289, 20481, 1.67)})}))
+    out = tmp_path / "baseline.json"
+    assert cr.main(["--bench", str(bench),
+                    "--write-baseline", str(out)]) == 0
+    doc = json.load(open(out))
+    assert doc["pipelines"]["tpchq6"]["fused"] == 12289
+
+
+def test_committed_baseline_matches_current_model():
+    """The committed baseline must agree with the cost model of this
+    revision (within the gate's own tolerance) -- otherwise CI is
+    already red on merge."""
+    from repro.core import dse
+    from repro.patterns.analytics import PIPELINES
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "benchmarks", "baseline_traffic.json")
+    baseline = json.load(open(path))["pipelines"]
+    assert set(baseline) == set(PIPELINES)
+    fresh = {}
+    for name, builder in PIPELINES.items():
+        pipe, _, _ = builder()
+        plan = dse.explore_pipeline(pipe, cache=False)
+        fresh[name] = {"fused": plan.traffic_words,
+                       "unfused": plan.unfused_traffic_words,
+                       "ratio": round(plan.traffic_ratio, 2)}
+    failures, _ = cr.compare(baseline, fresh)
+    assert failures == [], failures
+
+
+# ----------------------------------------------- run.py --json bugfix
+def test_write_json_emits_valid_empty_document(tmp_path, monkeypatch):
+    import run as runmod
+    monkeypatch.setattr(runmod, "JSON_ROWS", [])
+    path = runmod.write_json(str(tmp_path))
+    doc = json.load(open(path))
+    assert doc["rows"] == [] and "rev" in doc
+
+
+def test_json_written_even_when_section_crashes(tmp_path, monkeypatch):
+    import run as runmod
+    monkeypatch.setattr(runmod, "ROWS", [])
+    monkeypatch.setattr(runmod, "JSON_ROWS", [])
+
+    def boom():
+        raise RuntimeError("section exploded")
+
+    monkeypatch.setitem(runmod.SECTIONS, "table2", boom)
+    with pytest.raises(RuntimeError, match="exploded"):
+        runmod.main(["--only", "table2", "--json", str(tmp_path)])
+    files = [f for f in os.listdir(tmp_path) if f.startswith("BENCH_")]
+    assert len(files) == 1
+    doc = json.load(open(tmp_path / files[0]))
+    assert doc["rows"] == []
+    assert "section exploded" in doc.get("error", "")

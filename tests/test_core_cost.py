@@ -9,15 +9,12 @@ Fig. 5c (k-means, tiles b0 over n points, b1 over k clusters, d untiled):
   centroids chip | d                | b1*d             | b1*d
   minDist chip   | 2                | 2                | 2*b0
 """
-import numpy as np
 import sys, os
 
 sys.path.insert(0, os.path.dirname(__file__))
 from test_core_transforms import mk_kmeans, mk_gemm
 
 from repro.core.cost import traffic
-from repro.core.fusion import lift_tile_stages
-from repro.core.interchange import interchange
 from repro.core.strip_mine import insert_tile_copies, strip_mine, tile
 
 N, K, D, B0, B1 = 48, 8, 5, 8, 4

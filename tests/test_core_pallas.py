@@ -1,9 +1,6 @@
 """Pallas backend vs jnp oracle for the tiled canonical forms."""
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import ir
 from repro.core.codegen_jax import execute
 from repro.core.codegen_pallas import lower
 from repro.core.strip_mine import tile
@@ -12,8 +9,7 @@ from repro.core.memory import plan_memory
 
 import sys, os
 sys.path.insert(0, os.path.dirname(__file__))
-from test_core_transforms import (mk_filter, mk_gemm, mk_hist, mk_map_2x,
-                                  mk_sumrows, _rng)
+from test_core_transforms import mk_filter, mk_gemm, mk_hist, mk_map_2x, _rng
 
 
 def test_pallas_tiled_map():

@@ -6,11 +6,9 @@ show and (b) compute the same value as the untransformed oracle.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import ir
 from repro.core.codegen_jax import execute
-from repro.core.fusion import lift_tile_stages
 from repro.core.interchange import interchange
 from repro.core.strip_mine import insert_tile_copies, strip_mine, tile
 

@@ -6,7 +6,6 @@ hoisted preloads are loop-invariant and single-buffered, and the
 accumulator-dedup optimization keeps a single accumulator for tiled
 MultiFolds.
 """
-import numpy as np
 import pytest
 
 import sys, os
@@ -16,7 +15,7 @@ from test_core_transforms import mk_gemm, mk_kmeans, mk_sumrows
 from repro.core import ir
 from repro.core.affine import AffineMap
 from repro.core.cost import traffic
-from repro.core.fusion import fuse_pipeline_stages, lift_tile_stages
+from repro.core.fusion import fuse_pipeline_stages
 from repro.core.memory import plan_memory
 from repro.core.scheduling import build_schedule
 from repro.core.strip_mine import tile
@@ -81,11 +80,14 @@ def test_every_stage_crossing_buffer_double_buffered():
 
 def test_preloads_are_loop_invariant():
     """Hoisted loads sit in Pipe 0: constant index map (no dependence on
-    any loop index), loaded exactly once, never double-buffered."""
+    any loop index), loaded exactly once, never double-buffered.  The
+    kmeans pipeline is a fan-out DAG now, so check the terminal tree
+    that carries the assign stage's centroids preload."""
     from repro.patterns.analytics import kmeans_pipeline
     pipe, _, _ = kmeans_pipeline()
-    from repro.core.pipeline import fuse
-    fused = fuse(pipe, 128)
+    from repro.core.pipeline import fuse_dag
+    fdag = fuse_dag(pipe, 128)
+    fused = fdag.terminals[0][1]
     hoisted = [tc for q in ir.walk(fused) for tc in q.loads if tc.hoisted]
     assert any("centroids" in tc.name for tc in hoisted)
     for tc in hoisted:

@@ -1,11 +1,13 @@
 """Pipeline fusion (core.pipeline + dse.explore_pipeline + the fused
-megakernel): the ISSUE-2 acceptance surface.
+megakernel): the ISSUE-2/ISSUE-3 acceptance surface.
 
-Covers: fused IR structure, fused program == codegen_jax oracle ==
-numpy reference for tpchq6/gda/kmeans, the >= 1.5x modeled-traffic win,
-joint-plan caching (hit on second call, invalidated on stage change),
-the split fallback when VMEM is tight, and the block-alignment bugfix
-in codegen_pallas._block_index_map.
+Covers: fused IR structure (chains and fan-out DAGs), fused program ==
+codegen_jax oracle == numpy reference for all PIPELINES (including the
+multi-output kmeans / gda_moments DAGs and the Map-terminal normalize),
+the modeled-traffic win, joint-plan caching (hit on second call,
+invalidated on stage change, insensitive to declaration order), the
+split fallback when VMEM is tight, and the block-alignment bugfix in
+codegen_pallas._block_index_map.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -23,38 +25,57 @@ ALL = sorted(PIPELINES)
 
 
 def _setup(name):
+    """(pipe, inputs, ref) with ref normalized to {output: array}."""
     pipe, make_inputs, reference = PIPELINES[name]()
     inputs = {k: jnp.asarray(v) for k, v in make_inputs().items()}
-    return pipe, inputs, np.asarray(reference(make_inputs()))
+    ref = reference(make_inputs())
+    if not isinstance(ref, dict):
+        ref = {plmod.output_names(pipe)[0]: np.asarray(ref)}
+    return pipe, inputs, ref
+
+
+def _check(pipe, got, ref):
+    if not isinstance(got, dict):
+        got = {plmod.output_names(pipe)[0]: got}
+    assert set(got) >= set(ref)
+    for k, want in ref.items():
+        np.testing.assert_allclose(np.asarray(got[k]), want,
+                                   rtol=2e-3, atol=2e-3)
 
 
 # ------------------------------------------------------- fused IR shape
 @pytest.mark.parametrize("name", ALL)
 def test_fuse_structure(name):
     pipe, _, _ = _setup(name)
-    fused = plmod.fuse(pipe, 128)
-    assert fused.strided and len(fused.domain) == 1
-    stage_loads = [tc for tc in fused.loads
-                   if isinstance(tc.src, ir.Pattern)]
-    assert len(stage_loads) == len(pipe.stages) - 1
-    # intermediates are VMEM-resident: no main-memory tensor by that name
-    inter = set(plmod.intermediate_names(pipe))
-    assert not (inter & {t.name for t in ir.inputs_of(fused)})
-    # every external tensor read became a tile copy (nothing streams)
-    for q in ir.walk(fused):
-        for a in q.accesses:
-            assert not isinstance(a.src, ir.Tensor)
+    fdag = plmod.fuse_dag(pipe, 128)
+    producers = set(plmod.intermediate_names(pipe))
+    stage_uids = {}
+    for _, t in fdag.terminals:
+        assert t.strided and len(t.domain) == 1
+        for tc in t.loads:
+            if isinstance(tc.src, ir.Pattern):
+                stage_uids.setdefault(tc.name, set()).add(tc.uid)
+        # intermediates are VMEM-resident: no main-memory tensor by
+        # that name anywhere in the terminal tree
+        assert not (producers & {x.name for x in ir.inputs_of(t)})
+        # every external tensor read became a tile copy (no streaming)
+        for q in ir.walk(t):
+            for a in q.accesses:
+                assert not isinstance(a.src, ir.Tensor)
+    # one lifted stage per producer, and -- fan-out contract -- a
+    # producer referenced from several terminal trees keeps ONE uid
+    assert set(stage_uids) == {p + "_stage" for p in producers}
+    assert all(len(uids) == 1 for uids in stage_uids.values())
 
 
 @pytest.mark.parametrize("name", ALL)
 def test_fused_ir_matches_oracle_and_reference(name):
     pipe, inputs, ref = _setup(name)
-    out_unfused = plmod.run_unfused(pipe, inputs)
-    np.testing.assert_allclose(np.asarray(out_unfused), ref,
-                               rtol=2e-3, atol=2e-3)
-    out_fused = execute(plmod.fuse(pipe, 128), inputs)
-    np.testing.assert_allclose(np.asarray(out_fused), ref,
-                               rtol=2e-3, atol=2e-3)
+    _check(pipe, plmod.run_unfused(pipe, inputs), ref)
+    fdag = plmod.fuse_dag(pipe, 128)
+    for oname, t in fdag.terminals:
+        np.testing.assert_allclose(np.asarray(execute(t, inputs)),
+                                   ref[oname], rtol=2e-3, atol=2e-3)
 
 
 # --------------------------------------------------- megakernel lowering
@@ -63,26 +84,31 @@ def test_megakernel_matches_oracle(name):
     pipe, inputs, ref = _setup(name)
     kern = lower_fused_pipeline(pipe, cache=False)
     assert kern.pipeline_plan.fused
-    np.testing.assert_allclose(np.asarray(kern(**inputs)), ref,
-                               rtol=2e-3, atol=2e-3)
+    _check(pipe, kern(**inputs), ref)
 
 
 def test_lower_pipeline_unfused_path():
     pipe, inputs, ref = _setup("tpchq6")
     run = plmod.lower_pipeline(pipe, fused=False)
-    np.testing.assert_allclose(np.asarray(run(**inputs)), ref,
-                               rtol=2e-3, atol=2e-3)
+    _check(pipe, run(**inputs), ref)
+
+
+def test_lower_pipeline_unfused_multi_output():
+    pipe, inputs, ref = _setup("kmeans")
+    run = plmod.lower_pipeline(pipe, fused=False)
+    _check(pipe, run(**inputs), ref)
 
 
 # ------------------------------------------------------- traffic model
-def test_fused_traffic_at_least_1p5x_lower_on_two_of_three():
+def test_fused_traffic_at_least_1p5x_lower_on_most():
     ratios = {}
     for name in ALL:
         pipe, _, _ = _setup(name)
         plan = dse.explore_pipeline(pipe, cache=False)
         assert plan.fused
+        assert plan.traffic_words < plan.unfused_traffic_words, name
         ratios[name] = plan.traffic_ratio
-    assert sum(r >= 1.5 for r in ratios.values()) >= 2, ratios
+    assert sum(r >= 1.5 for r in ratios.values()) >= len(ALL) - 1, ratios
     # and the intermediates really contribute zero on the fused path:
     # fused words == external reads + output write
     pipe, _, _ = _setup("tpchq6")
@@ -94,6 +120,39 @@ def test_fused_traffic_at_least_1p5x_lower_on_two_of_three():
     assert plmod.fused_traffic_words(pipe, plan.block) \
         == plan.traffic_words
     assert plmod.unfused_traffic_words(pipe) == plan.unfused_traffic_words
+
+
+def test_fanout_producer_loaded_once_per_outer_step():
+    """kmeans DAG acceptance: the fan-out producer's tiles come from
+    VMEM (zero HBM reads for the intermediate), the points tile feeding
+    assign AND scatter-sum is DMA'd exactly once per outer step, and
+    the fused traffic is strictly below unfused."""
+    pipe, _, _ = _setup("kmeans")
+    n, block = pipe.shared_extent, 128
+    fdag = plmod.fuse_dag(pipe, block)
+    assert fdag.refcounts["km_assign"] == 2      # fan-out, ref-counted
+    reads = plmod.dag_external_reads(fdag)
+    assert "km_assign" not in reads              # never touches HBM
+    d = 16
+    assert reads["points"] == (n // block) * block * d   # once per step
+    assert reads["centroids"] == 8 * d           # Pipe-0 preload, once
+    assert plmod.fused_traffic_words(pipe, block) \
+        < plmod.unfused_traffic_words(pipe)
+
+
+def test_fanout_memory_plan_counts_scratch_once():
+    """plan_memory over the whole terminal set charges the fan-out
+    stage's double-buffered scratch once, with a port per reader."""
+    pipe, _, _ = _setup("kmeans")
+    mem = plmod.fused_memory_plan(pipe, 128)
+    assert mem.fits
+    stage = [b for b in mem.buffers if b.name.startswith("km_assign_stage")]
+    assert len(stage) == 1
+    assert stage[0].double_buffered
+    assert stage[0].ports >= 3                   # 2 readers + writer
+    # the shared points tile: one buffer despite two terminal trees
+    pts = [b for b in mem.buffers if b.name.startswith("points_tile")]
+    assert len(pts) == 1
 
 
 def test_fused_vmem_plan_double_buffers_intermediate():
@@ -125,6 +184,7 @@ def test_pipeline_plan_cached_and_replayed(tmp_path):
     assert plan2.cached
     assert plan2.block == plan1.block
     assert plan2.groups == plan1.groups
+    assert plan2.group_blocks == plan1.group_blocks
     assert plan2.traffic_words == plan1.traffic_words
 
 
@@ -141,13 +201,28 @@ def test_pipeline_plan_invalidated_on_stage_change(tmp_path):
 def test_pipeline_key_sensitive_to_each_stage():
     pipe, _, _ = _setup("gda")
     k0 = dse.pipeline_key(pipe)
-    # change only the *producer* stage's elem width
+    # change only the *producer* stage's external input (same shapes,
+    # same wiring -- the stage signature alone must move the key)
     feat = pipe.stages[0]
-    feat2 = ir.Map(domain=feat.domain, elem_shape=(8,), reads=feat.reads,
+    other = ir.Tensor("pts_alt", (pipe.shared_extent, 8))
+    feat2 = ir.Map(domain=feat.domain, elem_shape=feat.elem_shape,
+                   reads=(ir.Access(other, lambda i: (i, 0), (1, 8)),),
                    fn=feat.fn, name=feat.name)
     pipe2 = plmod.Pipeline(name=pipe.name,
                            stages=(feat2,) + pipe.stages[1:])
     assert dse.pipeline_key(pipe2) != k0
+
+
+def test_pipeline_key_is_topological():
+    """The DSE cache key hashes the DAG, not the declaration order:
+    reordering independent stages yields the same key (and the same
+    cached plan), while rewiring an edge changes it."""
+    pipe, _, _ = _setup("kmeans")
+    reordered = plmod.Pipeline(
+        name=pipe.name,
+        stages=(pipe.stages[0], pipe.stages[2], pipe.stages[1]))
+    assert dse.pipeline_key(reordered) == dse.pipeline_key(pipe)
+    assert plmod.output_names(reordered) == plmod.output_names(pipe)
 
 
 # ------------------------------------------------------- split fallback
@@ -158,12 +233,12 @@ def test_split_fallback_when_vmem_tight():
     plan = dse.explore_pipeline(pipe, vmem_budget=80_000, cache=False)
     assert not plan.fused
     assert plan.groups == ((0, 1), (1, 2))
+    assert len(plan.group_blocks) == 2   # per-group block sizes
     # the split pays the intermediate round-trip the fused plan deletes
     full = dse.explore_pipeline(pipe, cache=False)
     assert plan.traffic_words > full.traffic_words
     kern = lower_fused_pipeline(pipe, plan=plan, vmem_budget=80_000)
-    np.testing.assert_allclose(np.asarray(kern(**inputs)), ref,
-                               rtol=2e-3, atol=2e-3)
+    _check(pipe, kern(**inputs), ref)
 
 
 def test_no_candidate_raises():
@@ -181,7 +256,9 @@ def test_group_lowerings_report_what_ran():
     kern2 = lower_fused_pipeline(_setup("gda")[0], plan=split,
                                  vmem_budget=80_000)
     assert len(kern2.group_lowerings) == 2
-    assert kern2.group_lowerings[-1][1] == "megakernel"
+    # the bare-Map first group now lowers through the write-once
+    # streaming template -- a megakernel, not a per-stage fallback
+    assert all(how == "megakernel" for _, how in kern2.group_lowerings)
 
 
 def test_megakernel_scalar_element_groupby():
@@ -210,7 +287,7 @@ def test_megakernel_scalar_element_groupby():
 
 
 # ------------------------------------------------------- validation
-def test_pipeline_validation():
+def test_pipeline_validation_basics():
     x = ir.Tensor("x", (64,))
     m = ir.Map(domain=(64,), reads=(ir.elem(x),),
                fn=lambda s, e: e, name="a")
@@ -218,13 +295,20 @@ def test_pipeline_validation():
                  fn=lambda s, e: e, name="b")
     with pytest.raises(ValueError, match="shared"):
         plmod.Pipeline(name="p", stages=(m, bad))
-    reads_future = ir.Map(domain=(64,),
-                          reads=(ir.elem(ir.Tensor("z", (64,))),),
-                          fn=lambda s, e: e, name="a2")
+
+
+def test_pipeline_stages_may_be_declared_out_of_order():
+    """DAG semantics: declaration order is irrelevant; the consumer may
+    precede its producer in ``stages`` (the old chain API raised)."""
+    x = ir.Tensor("x", (64,))
+    consumer = ir.Map(domain=(64,),
+                      reads=(ir.elem(ir.Tensor("z", (64,))),),
+                      fn=lambda s, e: e, name="a2")
     z = ir.Map(domain=(64,), reads=(ir.elem(x),),
                fn=lambda s, e: e, name="z")
-    with pytest.raises(ValueError, match="before"):
-        plmod.Pipeline(name="p", stages=(reads_future, z))
+    pipe = plmod.Pipeline(name="p", stages=(consumer, z))
+    assert [s.name for s in plmod.topo_stages(pipe)] == ["z", "a2"]
+    assert plmod.output_names(pipe) == ("a2",)
 
 
 # ---------------------------------------------- kernels.fused_filter_fold
@@ -241,6 +325,31 @@ def test_fused_filter_fold_kernel(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_DSE_CACHE", str(tmp_path / "dse.json"))
     out = fused_filter_fold(x, w, lo, hi, auto_tile=True)
     np.testing.assert_allclose(float(out), ref, rtol=1e-5)
+
+
+# ------------------------------------------------ kernels.fused_kmeans
+def test_fused_kmeans_kernel(tmp_path, monkeypatch):
+    from repro.kernels.fused_kmeans import fused_kmeans_step
+    n, k, d = 256, 8, 16
+    rng = np.random.RandomState(0)
+    pts = jnp.asarray(rng.randn(n, d).astype(np.float32))
+    cents = jnp.asarray(rng.randn(k, d).astype(np.float32))
+    d2 = ((np.asarray(pts)[:, None] - np.asarray(cents)[None]) ** 2
+          ).sum(-1)
+    idx = d2.argmin(1)
+    ref_s = np.zeros((k, d), np.float32)
+    ref_c = np.zeros((k,), np.float32)
+    for i in range(n):
+        ref_s[idx[i]] += np.asarray(pts)[i]
+        ref_c[idx[i]] += 1
+    sums, counts = fused_kmeans_step(pts, cents, block_n=64)
+    np.testing.assert_allclose(np.asarray(sums), ref_s,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), ref_c)
+    monkeypatch.setenv("REPRO_DSE_CACHE", str(tmp_path / "dse.json"))
+    sums, counts = fused_kmeans_step(pts, cents, auto_tile=True)
+    np.testing.assert_allclose(np.asarray(sums), ref_s,
+                               rtol=1e-4, atol=1e-4)
 
 
 # -------------------------------------- _block_index_map alignment bugfix

@@ -1,0 +1,205 @@
+"""Pipeline DAG semantics: validate error paths, fan-out contracts and
+the write-once Map-terminal template (the ISSUE-3 acceptance surface).
+
+Each invalid DAG must raise a *specific* ValueError at Pipeline
+construction -- cycles, dangling intermediates, fan-out into mismatched
+extents, Map terminals that would revisit the streamed outer -- rather
+than lowering garbage.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ir
+from repro.core import pipeline as plmod
+from repro.core.codegen_pallas import lower_fused_dag
+
+
+def _map(name, n=64, src=None, elem=()):
+    src = src if src is not None else ir.Tensor("x", (n,))
+    return ir.Map(domain=(n,), elem_shape=elem,
+                  reads=(ir.elem(src),),
+                  fn=lambda s, e: e, name=name)
+
+
+# --------------------------------------------------------- error paths
+def test_validate_rejects_cycle():
+    a = _map("a", src=ir.Tensor("b", (64,)))
+    b = _map("b", src=ir.Tensor("a", (64,)))
+    with pytest.raises(ValueError, match="cycle"):
+        plmod.Pipeline(name="p", stages=(a, b))
+
+
+def test_validate_rejects_self_cycle():
+    a = _map("a", src=ir.Tensor("a", (64,)))
+    with pytest.raises(ValueError, match="cycle"):
+        plmod.Pipeline(name="p", stages=(a,))
+
+
+def test_validate_rejects_dangling_intermediate():
+    a = _map("a")          # produced, never consumed, not an output
+    b = _map("b")
+    with pytest.raises(ValueError, match="dangling intermediate 'a'"):
+        plmod.Pipeline(name="p", stages=(a, b), outputs=("b",))
+
+
+def test_validate_rejects_unknown_output():
+    a = _map("a")
+    with pytest.raises(ValueError, match="names no stage"):
+        plmod.Pipeline(name="p", stages=(a,), outputs=("nope",))
+
+
+def test_validate_rejects_fanout_mismatched_extents():
+    n = 64
+    prod = _map("prod", n)                        # produces (64,)
+    ok = _map("c1", n, src=ir.Tensor("prod", (n,)))
+    bad = ir.Map(domain=(n,),
+                 reads=(ir.Access(ir.Tensor("prod", (n, 2)),
+                                  lambda i: (i, 0), (1, 2)),),
+                 fn=lambda s, e: e[0], name="c2")
+    with pytest.raises(ValueError, match="mismatched extents"):
+        plmod.Pipeline(name="p", stages=(prod, ok, bad))
+
+
+def test_validate_rejects_map_terminal_with_revisited_outer():
+    n = 64
+    prod = _map("prod", n)
+    # terminal Map reads the WHOLE intermediate each step: the
+    # write-once streamed outer would have to revisit earlier tiles
+    term = ir.Map(domain=(n,),
+                  reads=(ir.whole(ir.Tensor("prod", (n,))),),
+                  fn=lambda s, all_: jnp.sum(all_), name="term")
+    with pytest.raises(ValueError, match="revisit"):
+        plmod.Pipeline(name="p", stages=(prod, term))
+
+
+def test_validate_rejects_domain_mismatch_and_tiled_stages():
+    from repro.core.strip_mine import strip_mine
+    a = _map("a", 64)
+    with pytest.raises(ValueError, match="must be untiled"):
+        plmod.Pipeline(name="p",
+                       stages=(strip_mine(a, {"a": (8,)}),))
+
+
+def test_validate_rejects_output_also_consumed():
+    a = _map("a")
+    b = _map("b", src=ir.Tensor("a", (64,)))
+    with pytest.raises(NotImplementedError, match="also consumed"):
+        plmod.Pipeline(name="p", stages=(a, b), outputs=("a", "b"))
+
+
+def test_validate_rejects_non_map_producer():
+    fold = ir.MultiFold(
+        domain=(64,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(ir.elem(ir.Tensor("x", (64,))),),
+        out_index_map=lambda i: (), update_shape=(),
+        fn=lambda s, acc, v: acc + v, combine=lambda a, b: a + b,
+        name="total")
+    # a consumer forces `total` to be a producer -- but folds cannot
+    # stream row-by-row into a later stage
+    cons = _map("c", src=ir.Tensor("total", ()))
+    with pytest.raises((NotImplementedError, ValueError)):
+        plmod.Pipeline(name="p", stages=(fold, cons))
+
+
+# ------------------------------------------------ fan-out tensor dedup
+def test_shared_tensor_tile_deduped_across_terminals():
+    """gda_moments: both keyed-fold terminals read the labels tile; the
+    fused accounting and memory plan must charge that DMA once."""
+    from repro.patterns.analytics import gda_moments_pipeline
+    pipe, _, _ = gda_moments_pipeline()
+    n = pipe.shared_extent
+    block = 128
+    fdag = plmod.fuse_dag(pipe, block)
+    reads = plmod.dag_external_reads(fdag)
+    assert reads["labels"] == n          # once per step, not per terminal
+    assert reads["pts"] == n * 8         # feat's read, shared
+    assert "gdam_feat" not in reads      # fan-out stage: VMEM only
+    mem = plmod.fused_memory_plan(pipe, block)
+    labels = [b for b in mem.buffers if b.name.startswith("labels_tile")]
+    assert len(labels) == 1
+    feat = [b for b in mem.buffers
+            if b.name.startswith("gdam_feat_stage")]
+    assert len(feat) == 1 and feat[0].double_buffered
+
+
+# ------------------------------------------- Map-terminal template
+def test_map_terminal_streams_write_once_blocks():
+    """The normalize pipeline's terminal is a Map: its output BlockSpec
+    must advance with the grid (write-once streaming), unlike the
+    revisited accumulator of fold/CAM terminals."""
+    from repro.patterns.analytics import normalize_pipeline
+    pipe, make_inputs, reference = normalize_pipeline()
+    fdag = plmod.fuse_dag(pipe, 128)
+    (oname, t), = fdag.terminals
+    assert isinstance(t, ir.MultiFold) and t.combine is None
+    assert isinstance(t.inner, ir.Map)
+    kern = lower_fused_dag(fdag.terminals, fdag.grid)
+    inputs = {k: jnp.asarray(v) for k, v in make_inputs().items()}
+    out = kern(**inputs)[oname]
+    np.testing.assert_allclose(np.asarray(out),
+                               reference(make_inputs()),
+                               rtol=2e-3, atol=2e-3)
+    # write-once: every row's norm is 1 (no block was overwritten /
+    # left at its init value)
+    norms = np.linalg.norm(np.asarray(out), axis=1)
+    np.testing.assert_allclose(norms, np.ones_like(norms), rtol=1e-4)
+
+
+def test_map_terminal_scalar_elem_pads_to_2d():
+    """A Map terminal with elem_shape=() streams rank-1 (b,) tiles;
+    the template must pad blocks to (b, 1) and reshape back."""
+    n = 256
+    x = ir.Tensor("x", (n,))
+    double = _map("dbl", n, src=x)
+    scale = ir.Map(domain=(n,),
+                   reads=(ir.elem(ir.Tensor("dbl", (n,))),),
+                   fn=lambda s, e: e * 3.0, name="out3")
+    pipe = plmod.Pipeline(name="p", stages=(double, scale))
+    xs = np.random.RandomState(0).rand(n).astype(np.float32)
+    fdag = plmod.fuse_dag(pipe, 64)
+    kern = lower_fused_dag(fdag.terminals, fdag.grid)
+    out = kern(x=jnp.asarray(xs))["out3"]
+    assert out.shape == (n,)
+    np.testing.assert_allclose(np.asarray(out), xs * 3.0, rtol=1e-6)
+
+
+# ----------------------------------------------- multi-output lowering
+def test_three_terminal_dag_single_kernel():
+    """One producer feeding three terminals of all three template kinds
+    (fold, keyed fold, Map) lowers as ONE kernel with three outputs."""
+    n, k = 128, 4
+    x = ir.Tensor("x", (n,))
+    feat = _map("feat", n, src=x)
+    total = ir.MultiFold(
+        domain=(n,), range_shape=(), init=lambda: jnp.zeros(()),
+        reads=(ir.elem(ir.Tensor("feat", (n,))),),
+        out_index_map=lambda i: (), update_shape=(),
+        fn=lambda s, acc, v: acc + v, combine=lambda a, b: a + b,
+        name="total")
+    hist = ir.GroupByFold(
+        domain=(n,), num_keys=k, elem_shape=(),
+        init=lambda: jnp.zeros((k,)),
+        reads=(ir.elem(ir.Tensor("feat", (n,))),),
+        fn=lambda s, v: (jnp.clip(jnp.floor(v * k), 0, k - 1
+                                  ).astype(jnp.int32), jnp.float32(1.0)),
+        combine=lambda a, b: a + b, name="hist")
+    scaled = ir.Map(domain=(n,),
+                    reads=(ir.elem(ir.Tensor("feat", (n,))),),
+                    fn=lambda s, v: v * 2.0, name="scaled")
+    pipe = plmod.Pipeline(name="tri", stages=(feat, total, hist, scaled))
+    assert plmod.output_names(pipe) == ("hist", "scaled", "total")
+    assert plmod.consumers(pipe)["feat"] == ("total", "hist", "scaled")
+
+    xs = np.random.RandomState(1).rand(n).astype(np.float32) * 0.999
+    fdag = plmod.fuse_dag(pipe, 32)
+    assert fdag.refcounts == {"feat": 3}
+    kern = lower_fused_dag(fdag.terminals, fdag.grid)
+    out = kern(x=jnp.asarray(xs))
+    np.testing.assert_allclose(float(out["total"]), xs.sum(), rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(out["hist"]),
+        np.bincount(np.clip((xs * k).astype(int), 0, k - 1),
+                    minlength=k).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(out["scaled"]), xs * 2.0,
+                               rtol=1e-6)

@@ -20,7 +20,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core import ir
 from repro.core.codegen_jax import execute
 from repro.core.cost import traffic
-from repro.core.strip_mine import insert_tile_copies, strip_mine, tile
+from repro.core.strip_mine import tile
 from repro.data.pipeline import TokenPipeline
 
 SETTINGS = dict(max_examples=20, deadline=None)
