@@ -3,7 +3,10 @@
 Compares a fresh ``BENCH_<rev>.json`` (``benchmarks/run.py --json``)
 against the committed ``benchmarks/baseline_traffic.json`` and fails
 (exit 1) when any pipeline's modeled traffic regresses by more than the
-tolerance (default 5%):
+tolerance (default 5%).  The BENCH json's timing metadata
+(``--repeat``/``--warmup``) and any measured/* (hybrid-DSE) rows are
+echoed as notes so noisy measured configurations are visible in the
+gate output.  Failures:
 
   * fused traffic words grew        (the megakernel moves more HBM)
   * unfused/fused ratio shrank      (the fusion win eroded)
@@ -45,6 +48,35 @@ def load_doc(path_or_glob: str) -> Dict:
 
 def load_rows(path_or_glob: str) -> List[Dict]:
     return load_doc(path_or_glob).get("rows", [])
+
+
+def timing_notes(doc: Dict) -> List[str]:
+    """Human-readable notes about how the benchmark's wall times were
+    taken (``run.py --repeat/--warmup``, recorded in the BENCH json) --
+    printed with the gate result so a noisy measured configuration is
+    visible next to the numbers it produced."""
+    notes: List[str] = []
+    t = doc.get("timing")
+    if not t:
+        return notes
+    rep = t.get("repeat")
+    rep_max = t.get("repeat_max", rep)
+    rep_s = f"{rep}" if rep_max == rep else f"{rep}-{rep_max}"
+    notes.append(
+        f"timings: median of repeat={rep_s} "
+        f"(warmup={t.get('warmup')} excluded) on "
+        f"device={t.get('device', '?')}"
+        + (" [interpret mode]" if t.get("interpret") else ""))
+    measured = [r for r in doc.get("rows", [])
+                if r.get("section") == "measured"]
+    if measured:
+        notes.append(f"{len(measured)} measured/* rows (hybrid DSE) in "
+                     f"this benchmark")
+        if int(t.get("repeat") or 0) < 3:
+            notes.append(
+                "measured rows taken with repeat < 3: medians may be "
+                "noisy; prefer --repeat 3+ before trusting rankings")
+    return notes
 
 
 def extract_traffic(rows: List[Dict]) -> Dict[str, Dict[str, float]]:
@@ -117,6 +149,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     doc = load_doc(args.bench)
+    for n in timing_notes(doc):
+        print(f"note: {n}")
     if doc.get("error"):
         # run.py records a mid-run crash in the (still-valid) BENCH
         # json; its rows are partial -- neither gate against them nor

@@ -24,6 +24,19 @@ Prints ``name,us_per_call,derived`` CSV:
               HBM traffic (the intermediate round-trips fusion deletes;
               paper Fig. 5/6).  These rows feed the CI perf-regression
               gate (``benchmarks/check_regression.py``).
+  measured/*  (--measure) hybrid analytic->measured DSE
+              (``core.measure`` / ``core.calibrate``): for all five
+              Pallas kernels' proxy programs and all five PIPELINES,
+              the analytic shortlist's top-k candidates are lowered and
+              timed, and the row reports the Spearman rank correlation
+              of the analytic and the calibrated model's candidate
+              ranking against the measured one, plus the calibration
+              profile the samples refreshed.
+
+All wall times go through ``core.measure.measure``: warmup runs
+(compilation) excluded, median of ``--repeat`` (default 3) fenced
+calls.  ``--warmup``/``--repeat`` are recorded in the BENCH json so the
+regression gate can flag noisy configurations.
 
 ``--only fig5c,table2`` restricts to the named sections (CI smoke).
 ``--json OUT`` additionally writes the rows as machine-readable
@@ -38,13 +51,13 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ir
+from repro.core import measure as measure_mod
 from repro.core.codegen_jax import execute
 from repro.core.cost import traffic
 from repro.core.scheduling import build_schedule, model_speedup
@@ -53,6 +66,13 @@ from repro.patterns.analytics import PIPELINES, SUITE
 
 ROWS = []
 JSON_ROWS = []
+
+# timing configuration (overridden by --repeat/--warmup in main);
+# repeat=None means "each call site's historical default", and the
+# repeats _time actually used are tracked so the BENCH json reports
+# what really happened, not the configured wish
+TIMING = {"repeat": None, "warmup": 1, "topk": None,
+          "used_min": None, "used_max": None}
 
 
 def emit(name: str, us: float, derived, **extra) -> None:
@@ -87,7 +107,17 @@ def write_json(out: str, error: str = "") -> str:
     path = out if out.endswith(".json") else os.path.join(
         out, f"BENCH_{rev}.json")
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    doc = {"rev": rev, "rows": JSON_ROWS}
+    doc = {"rev": rev, "rows": JSON_ROWS,
+           # repeat = the SMALLEST repeat any timed row actually used
+           # (sections default to 1-3 when --repeat is unset), so the
+           # regression gate's noise note fires on what really ran
+           "timing": {"repeat": TIMING["used_min"]
+                      or TIMING["repeat"] or 3,
+                      "repeat_max": TIMING["used_max"]
+                      or TIMING["repeat"] or 3,
+                      "warmup": TIMING["warmup"],
+                      "device": measure_mod.device_kind(),
+                      "interpret": measure_mod.interpret_mode()}}
     if error:
         doc["error"] = error
     with open(path, "w") as f:
@@ -97,11 +127,14 @@ def write_json(out: str, error: str = "") -> str:
 
 
 def _time(fn, reps=3):
-    fn()  # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / reps * 1e6
+    """Steady-state µs of ``fn()`` via ``core.measure``: warmup runs
+    (compilation) excluded, median of the repeats, every call fenced.
+    ``--repeat``/``--warmup`` override every call site's default."""
+    repeat = TIMING["repeat"] or reps
+    TIMING["used_min"] = min(TIMING["used_min"] or repeat, repeat)
+    TIMING["used_max"] = max(TIMING["used_max"] or repeat, repeat)
+    m = measure_mod.measure(fn, warmup=TIMING["warmup"], repeat=repeat)
+    return m.median_s * 1e6
 
 
 def _modeled_seconds(prog, metapipelined: bool) -> float:
@@ -334,6 +367,105 @@ def fused():
          "PASS" if strict == len(PIPELINES) else "FAIL", strict=strict)
 
 
+def _kernel_proxy_programs():
+    """The five Pallas kernels' DSE proxy programs at the suite's
+    interpret-friendly shapes (one entry per ``auto_tile=True`` kernel)."""
+    from repro.core import dse
+
+    return {
+        "matmul": dse.gemm_program(256, 256, 256),
+        "flash_attention": dse.attention_program(256, 256, 64),
+        "ssd_scan": dse.scan_program(256, 16, 32),
+        "filter_reduce": dse.filter_reduce_program(4096),
+        "groupby_fold": dse.groupby_program(256, 8, 16),
+    }
+
+
+def measured():
+    """Hybrid analytic->measured DSE over every kernel proxy and every
+    pipeline: lower + time the analytic top-k, fold the samples into
+    the device calibration profile, then table the Spearman rank
+    correlation of the analytic and the *final* calibrated ranking
+    against the measured one.  The gate row checks the calibrated model
+    ranks candidates at least as well as the uncalibrated one."""
+    from repro.core import calibrate, dse
+    from repro.core.cost import HBM_BYTES_PER_S
+    from repro.core.measure import spearman
+
+    top_k = TIMING["topk"] or dse.TOP_K
+    warmup = TIMING["warmup"]
+    repeat = TIMING["repeat"] or dse.MEASURE_REPEAT
+    TIMING["used_min"] = min(TIMING["used_min"] or repeat, repeat)
+    TIMING["used_max"] = max(TIMING["used_max"] or repeat, repeat)
+    # (row name, pattern kind, [(analytic_s, steps, measured_s, label)])
+    tables = []
+
+    for name, p in _kernel_proxy_programs().items():
+        ts = dse.measured_shortlist(p, top_k=top_k, warmup=warmup,
+                                    repeat=repeat)
+        tables.append((f"kernel/{name}", type(p).__name__,
+                       [(t.analytic_seconds, t.steps,
+                         t.measurement.median_s, str(dict(t.sizes)))
+                        for t in ts]))
+    for name, builder in PIPELINES.items():
+        pipe, _, _ = builder()
+        ts = dse.measured_pipeline_shortlist(pipe, top_k=top_k,
+                                             warmup=warmup, repeat=repeat)
+        tables.append((f"pipeline/{name}", "Pipeline",
+                       [(t.analytic_seconds, t.steps,
+                         t.measurement.median_s, f"block={t.block}")
+                        for t in ts]))
+
+    # rank correlations against the FINAL profile (fitted on exactly
+    # these samples): its rank guard makes the calibrated mean >= the
+    # analytic mean in-sample, the property the gate row asserts
+    prof = calibrate.load_profile()
+    rhos_a, rhos_c = [], []
+    for name, kind, rows in tables:
+        if not rows:
+            emit(f"measured/{name}", 0, "no-candidates-timed")
+            continue
+        meas = [r[2] for r in rows]
+        ana = [r[0] for r in rows]
+        cal = [r[0] if prof is None
+               else prof.seconds(kind, r[0] * HBM_BYTES_PER_S, r[1])
+               for r in rows]
+        rho_a = spearman(ana, meas)
+        rho_c = spearman(cal, meas)
+        rhos_a.append(rho_a)
+        rhos_c.append(rho_c)
+        best = min(range(len(rows)), key=lambda i: rows[i][2])
+        emit(f"measured/{name}", rows[best][2] * 1e6,
+             f"rho_analytic={rho_a:+.2f};rho_calibrated={rho_c:+.2f};"
+             f"timed={len(rows)};best={rows[best][3]}",
+             rho_analytic=round(rho_a, 3), rho_calibrated=round(rho_c, 3),
+             timed=len(rows))
+
+    if prof is not None:
+        emit("measured/calibration_profile", 0,
+             f"device={prof.device};mode={prof.mode};"
+             f"eff_bw={prof.bandwidth_bytes_per_s:.3e}B/s;"
+             f"n_samples={prof.n_samples};hash={prof.hash}",
+             device=prof.device, mode=prof.mode,
+             n_samples=prof.n_samples, profile_hash=prof.hash)
+    if not rhos_a:
+        # zero timed candidates means zero evidence: a broken
+        # lower-for-timing path must not show up as a green gate
+        emit("measured/calibrated_ge_analytic", 0,
+             "FAIL(no candidates were timed)", timed_workloads=0)
+        return
+    mean_a = sum(rhos_a) / len(rhos_a)
+    mean_c = sum(rhos_c) / len(rhos_c)
+    ok = mean_c >= mean_a - 0.05
+    emit("measured/calibrated_ge_analytic", 0,
+         ("PASS" if ok else "FAIL")
+         + f"(mean_rho_calibrated={mean_c:+.2f},"
+           f"mean_rho_analytic={mean_a:+.2f})",
+         mean_rho_analytic=round(mean_a, 3),
+         mean_rho_calibrated=round(mean_c, 3),
+         timed_workloads=len(rhos_a))
+
+
 SECTIONS = {
     "fig7": fig7,
     "fig5c": fig5c,
@@ -343,6 +475,7 @@ SECTIONS = {
     "roofline": roofline,
     "autotile": autotile,
     "fused": fused,
+    "measured": measured,
 }
 
 
@@ -351,6 +484,19 @@ def main(argv=None) -> None:
     ap.add_argument("--autotile", action="store_true",
                     help="also run the autotile section (DSE-tuned vs "
                          "hand-picked tile sizes)")
+    ap.add_argument("--measure", action="store_true",
+                    help="also run the measured section (hybrid "
+                         "analytic->measured DSE + calibration, rank-"
+                         "correlation table)")
+    ap.add_argument("--repeat", type=int, default=None, metavar="N",
+                    help="timed repeats per row (median reported; "
+                         "default: per-section, 1-3)")
+    ap.add_argument("--warmup", type=int, default=1, metavar="N",
+                    help="warmup (compile) runs excluded from every "
+                         "timing (default 1)")
+    ap.add_argument("--topk", type=int, default=None, metavar="K",
+                    help="candidates lowered+timed per workload in the "
+                         "measured section (default core.dse.TOP_K)")
     ap.add_argument("--only", default=None, metavar="SECTIONS",
                     help="comma-separated subset of sections to run: "
                          + ",".join(SECTIONS))
@@ -358,6 +504,9 @@ def main(argv=None) -> None:
                     help="write rows as BENCH_<rev>.json (OUT = dir or "
                          ".json path)")
     args = ap.parse_args(argv)
+    TIMING["repeat"] = args.repeat
+    TIMING["warmup"] = args.warmup
+    TIMING["topk"] = args.topk
 
     if args.only:
         names = [s.strip() for s in args.only.split(",") if s.strip()]
@@ -366,9 +515,11 @@ def main(argv=None) -> None:
             ap.error(f"unknown sections {unknown}; choose from "
                      f"{list(SECTIONS)}")
     else:
-        names = [s for s in SECTIONS if s != "autotile"]
+        names = [s for s in SECTIONS if s not in ("autotile", "measured")]
     if args.autotile and "autotile" not in names:
         names.append("autotile")
+    if args.measure and "measured" not in names:
+        names.append("measured")
 
     error = ""
     try:

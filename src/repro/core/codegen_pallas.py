@@ -659,7 +659,8 @@ def lower_fused_chain(p: ir.Pattern) -> Callable:
 
 def lower_fused_pipeline(pipe, *, plan=None,
                          vmem_budget: Optional[int] = None,
-                         cache=None) -> Callable:
+                         cache=None, measure: Optional[str] = None
+                         ) -> Callable:
     """Lower a ``pipeline.Pipeline`` (DAG) with a joint-DSE
     ``PipelinePlan``.
 
@@ -680,7 +681,8 @@ def lower_fused_pipeline(pipe, *, plan=None,
 
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
     if plan is None:
-        plan = explore_pipeline(pipe, vmem_budget=budget, cache=cache)
+        plan = explore_pipeline(pipe, vmem_budget=budget, cache=cache,
+                                measure=measure)
 
     runners = []
     lowerings = []
@@ -742,14 +744,69 @@ def lower(p: ir.Pattern) -> Callable:
         f"{p.strided}); supported: tiled Map/GEMM/GroupByFold/FlatMap")
 
 
+def lower_for_timing(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
+                     vmem_budget: Optional[int] = None,
+                     seed: int = 0) -> Tuple[Callable[[], Any], str]:
+    """Lower one tile-size candidate of an *untiled* pattern into a
+    zero-arg callable ready for the timing harness (``core.measure``).
+
+    Inputs are synthesized deterministically from the pattern's tensor
+    metadata; the Pallas template is preferred, and candidates with no
+    template fall back to the jitted ``codegen_jax`` oracle of the
+    *tiled* IR -- the same executable the fig7 rows time, so measured
+    rankings stay comparable across candidates.  On CPU the Pallas path
+    runs in interpret mode (``INTERPRET``); the timing DB records that.
+    Returns ``(fn, how)`` with ``how`` in {"pallas", "oracle"}.
+    """
+    from .codegen_jax import execute
+    from .cost import VMEM_BYTES
+    from .measure import synth_inputs
+    from .strip_mine import insert_tile_copies, strip_mine, tile
+
+    budget = VMEM_BYTES if vmem_budget is None else vmem_budget
+    try:
+        t = tile(p, sizes, vmem_budget_words=budget // 4)
+    except Exception:
+        # same fallback as dse._tile_ir: interchange/lift may not apply
+        t = insert_tile_copies(strip_mine(p, sizes),
+                               vmem_budget_words=budget // 4)
+    inputs = synth_inputs(ir.inputs_of(p), seed=seed)
+    try:
+        kern = lower(t)
+        # abstract-trace probe: template-shape mismatches that only
+        # surface at call time must route to the oracle, not blow up
+        # (or silently skip) the candidate
+        jax.eval_shape(lambda: kern(**inputs))
+        return (lambda: kern(**inputs)), "pallas"
+    except Exception:
+        run = jax.jit(lambda **kw: execute(t, kw))
+        return (lambda: run(**inputs)), "oracle"
+
+
+def lower_pipeline_for_timing(pipe, plan, *,
+                              vmem_budget: Optional[int] = None,
+                              seed: int = 0) -> Callable[[], Any]:
+    """Lower one fused-pipeline plan candidate into a zero-arg callable
+    over synthesized inputs, for the timing harness.  The plan is taken
+    as-is (no DSE re-entry), so each shortlisted block size times
+    exactly the megakernel it would ship as."""
+    from . import pipeline as plmod
+    from .measure import synth_inputs
+
+    inputs = synth_inputs(plmod.external_inputs(pipe), seed=seed)
+    call = lower_fused_pipeline(pipe, plan=plan, vmem_budget=vmem_budget)
+    return lambda: call(**inputs)
+
+
 def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
-               cache=None) -> Callable:
+               cache=None, measure: Optional[str] = None) -> Callable:
     """Tile an *untiled* pattern with a DSE-chosen ``TilePlan`` and lower
     it (paper §4 automated tile-size selection feeding §5 codegen).
 
     ``plan=None`` runs ``core.dse.explore`` (with its persistent tuning
-    cache); pass an explicit ``TilePlan`` to reuse a prior exploration.
-    The selected plan is exposed on the returned callable as
+    cache); pass an explicit ``TilePlan`` to reuse a prior exploration,
+    or ``measure="top_k"`` to let hybrid DSE back the plan with real
+    timings.  The selected plan is exposed on the returned callable as
     ``.tile_plan``.
     """
     from .cost import VMEM_BYTES
@@ -758,7 +815,8 @@ def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
 
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
     if plan is None:
-        plan = explore(p, vmem_budget=budget, cache=cache)
+        plan = explore(p, vmem_budget=budget, cache=cache,
+                       measure=measure)
     call = lower(tile(p, plan.sizes, vmem_budget_words=budget // 4))
     call.tile_plan = plan
     return call

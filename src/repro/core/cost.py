@@ -150,6 +150,25 @@ def stage_seconds_load(words: int, bytes_per_word: int = 4,
     return words * bytes_per_word / bw
 
 
+def stream_seconds(words: int, *, bytes_per_word: int = 4,
+                   kind: str = "", steps: int = 1,
+                   profile=None) -> float:
+    """HBM stream seconds for ``words`` main-memory words.
+
+    Uncalibrated (``profile=None``) this is the datasheet-bandwidth
+    stream time every DSE pricing used before measured autotuning.
+    With a ``calibrate.CalibrationProfile`` it becomes the *measured*
+    prediction: effective tier bandwidth plus the per-pattern launch
+    overhead paid once per kernel grid step -- the seam through which
+    measured runs feed back into ``traffic``-based pricing.
+    """
+    if profile is None:
+        return words * bytes_per_word / HBM_BYTES_PER_S
+    from .calibrate import predicted_seconds
+    return predicted_seconds(kind, words * bytes_per_word, steps,
+                             profile=profile)
+
+
 def stage_seconds_compute(flops: float,
                           peak: float = PEAK_FLOPS) -> float:
     return flops / peak

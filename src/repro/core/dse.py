@@ -18,11 +18,23 @@ This module is that subsystem, generalized beyond the GEMM template
      exceeds the VMEM budget (the paper's BRAM-capacity compile check);
   4. returns the argmin as a ``TilePlan``, memoized in a persistent
      on-disk tuning cache keyed by (pattern signature, input tensor
-     shapes, dtype, budget).
+     shapes, dtype, budget, device kind, calibration-profile hash).
 
 The objective is lexicographic: fewest main-memory words first (the
 quantity Fig. 5c/7 optimize), then modeled metapipelined seconds, then
 *largest* on-chip footprint (prefer reuse when traffic ties).
+
+Hybrid analytic->measured mode (``measure="top_k"``): the analytic
+enumeration + VMEM pruning above *shortlists* candidates, the top-k
+are actually lowered (``codegen_pallas.lower_for_timing``) and timed
+on device (``core.measure``: warmup excluded, median-of-k,
+device-keyed persistent timing DB), the measured argmin wins, and the
+samples update the per-device cost-model calibration profile
+(``core.calibrate``) that subsequent analytic pricing consumes.  Both
+the winning plan and every measurement are cached, so a second
+exploration does zero lowering and zero execution.  Setting
+``REPRO_MEASURE=top_k`` turns the hybrid mode on for every
+``auto_tile=True`` kernel and fused pipeline without code changes.
 
 The bottom half of the module is a library of *proxy programs*: small
 PPL models of each Pallas kernel's loop structure (flash attention, the
@@ -37,12 +49,12 @@ import hashlib
 import itertools
 import json
 import os
-import tempfile
 from typing import Dict, List, Optional, Tuple, Union
 
 
-from . import ir
-from .cost import HBM_BYTES_PER_S, VMEM_BYTES, traffic
+from . import calibrate, ir
+from . import measure as measure_mod
+from .cost import HBM_BYTES_PER_S, VMEM_BYTES, stream_seconds, traffic
 from .memory import plan_memory
 from .scheduling import build_schedule, model_speedup
 from .strip_mine import insert_tile_copies, strip_mine, tile
@@ -70,10 +82,40 @@ MAX_POINTS = 4096
 
 # Cost/memory-model revision, folded into every tuning-cache key: plans
 # priced under older model semantics (e.g. the pre-PR-2 single-buffer
-# accounting for strided loads, or the PR-2 chain-only pipeline pricing
-# superseded by the DAG accounting) must not be replayed as cache hits.
-# CI keys its persistent REPRO_DSE_CACHE on this string too.
-MODEL_VERSION = 3
+# accounting for strided loads, the PR-2 chain-only pipeline pricing
+# superseded by the DAG accounting, or the pre-calibration pricing that
+# ignored device identity and launch overhead) must not be replayed as
+# cache hits.  CI keys its persistent REPRO_DSE_CACHE on this string too.
+MODEL_VERSION = 4
+
+# hybrid-mode defaults: how many analytically shortlisted candidates
+# are actually lowered and timed, and the measurement shape
+TOP_K = 3
+MEASURE_WARMUP = 1
+MEASURE_REPEAT = 3
+
+
+def _measure_mode(measure: Optional[str]) -> Optional[str]:
+    """Resolve the ``measure`` argument: explicit value wins, else the
+    ``REPRO_MEASURE`` env opt-in (so every ``auto_tile=True`` caller can
+    be switched to hybrid DSE fleet-wide)."""
+    if measure is None:
+        measure = os.environ.get("REPRO_MEASURE") or None
+    if measure in (None, False, ""):
+        return None
+    if measure != "top_k":
+        raise ValueError(f"measure={measure!r}; supported: None, 'top_k'")
+    return measure
+
+
+def _resolve_profile(profile):
+    """``None`` -> the device's persisted calibration profile (if any),
+    ``False`` -> uncalibrated, else the given profile."""
+    if profile is False:
+        return None
+    if profile is None:
+        return calibrate.load_profile()
+    return profile
 
 
 # --------------------------------------------------------------------------
@@ -93,6 +135,9 @@ class TilePlan:
     pruned: int = 0          # candidates rejected by the VMEM budget
     thinned: bool = False    # search space was capped (MAX_POINTS)
     cached: bool = False     # served from the tuning cache
+    measured: bool = False   # winner backed by a real on-device timing
+    measured_seconds: float = 0.0   # winner's median wall time
+    timed: int = 0           # candidates actually lowered and timed
 
     def to_json(self) -> Dict:
         return {
@@ -103,6 +148,9 @@ class TilePlan:
             "explored": int(self.explored),
             "pruned": int(self.pruned),
             "thinned": bool(self.thinned),
+            "measured": bool(self.measured),
+            "measured_seconds": float(self.measured_seconds),
+            "timed": int(self.timed),
         }
 
     @classmethod
@@ -114,6 +162,9 @@ class TilePlan:
                    explored=int(d.get("explored", 0)),
                    pruned=int(d.get("pruned", 0)),
                    thinned=bool(d.get("thinned", False)),
+                   measured=bool(d.get("measured", False)),
+                   measured_seconds=float(d.get("measured_seconds", 0.0)),
+                   timed=int(d.get("timed", 0)),
                    cached=True)
 
 
@@ -123,12 +174,8 @@ class TilePlan:
 
 
 def default_cache_path() -> str:
-    env = os.environ.get("REPRO_DSE_CACHE")
-    if env:
-        return env
-    base = os.environ.get("XDG_CACHE_HOME",
-                          os.path.join(os.path.expanduser("~"), ".cache"))
-    return os.path.join(base, "repro", "dse_cache.json")
+    return measure_mod.cache_sibling_path("dse_cache.json",
+                                          "REPRO_DSE_CACHE")
 
 
 class TuningCache:
@@ -167,15 +214,8 @@ class TuningCache:
     def put(self, key: str, plan) -> None:
         data = self._load()
         data[key] = plan.to_json()
-        try:
-            os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
-            fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path) or ".",
-                                       prefix=".dse_cache.")
-            with os.fdopen(fd, "w") as f:
-                json.dump(data, f, indent=0, sort_keys=True)
-            os.replace(tmp, self.path)
-        except OSError:
-            pass  # read-only FS etc.: keep the in-memory copy only
+        measure_mod.atomic_write_json(self.path, data,
+                                      prefix=".dse_cache.")
 
     def clear(self) -> None:
         self._data = {}
@@ -229,20 +269,41 @@ def _reads_sig(p: ir.Pattern, enc: int = 0) -> Tuple:
     return tuple(out)
 
 
+def _key_context(device: Optional[str],
+                 profile_hash: Optional[str]) -> Tuple[str, str]:
+    """(device kind, calibration-profile hash) folded into every cache
+    key: a plan tuned on one device, or priced under one calibration,
+    must not be replayed on another device / after recalibration.
+    Explicit values (including ``""`` to opt out, e.g. for timing-DB
+    keys that identify the *computation*, not its pricing) pass through.
+    """
+    if device is None:
+        device = measure_mod.device_kind()
+    if profile_hash is None:
+        profile_hash = calibrate.active_profile_hash(device)
+    return device, profile_hash
+
+
 def pattern_key(p: ir.Pattern, *,
                 vmem_budget: int = VMEM_BYTES,
                 align: int = MXU,
-                extra: Tuple = ()) -> str:
+                extra: Tuple = (),
+                device: Optional[str] = None,
+                profile_hash: Optional[str] = None) -> str:
     """Tuning-cache key: structural signature + access descriptors +
-    input shapes/dtypes + exploration constraints.
+    input shapes/dtypes + exploration constraints + device kind +
+    calibration-profile hash.
 
     Any change to the pattern tree (domains, nesting, reads, tensor
-    shapes or dtypes) or to the constraints changes the key, so cached
-    plans invalidate automatically on shape change.
+    shapes or dtypes), to the constraints, to the device, or to the
+    active calibration changes the key, so cached plans invalidate
+    automatically instead of going stale.
     """
+    device, profile_hash = _key_context(device, profile_hash)
     inputs = tuple((t.name, tuple(t.shape), t.dtype)
                    for t in ir.inputs_of(p))
-    raw = repr((MODEL_VERSION, ir.signature(p), _reads_sig(p), inputs,
+    raw = repr((MODEL_VERSION, device, profile_hash,
+                ir.signature(p), _reads_sig(p), inputs,
                 int(vmem_budget), int(align), tuple(extra)))
     return hashlib.sha256(raw.encode()).hexdigest()[:32]
 
@@ -333,7 +394,27 @@ class Priced:
     sizes: Dict[str, Tuple[int, ...]]
     traffic_words: int
     vmem_bytes: int
-    modeled_seconds: float
+    modeled_seconds: float           # uncalibrated analytic prediction
+    calibrated_seconds: float = -1.0  # profile-adjusted (== analytic
+    steps: int = 1                    # when uncalibrated); grid steps
+
+    def __post_init__(self):
+        if self.calibrated_seconds < 0:
+            object.__setattr__(self, "calibrated_seconds",
+                               self.modeled_seconds)
+
+
+def grid_steps(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]]) -> int:
+    """Kernel grid steps the tiled program executes: the product of
+    (extent / tile) over every tiled domain.  The trip count the
+    calibration model charges per-pattern launch overhead against."""
+    steps = 1
+    for q in ir.walk(p):
+        if q.name not in sizes or not q.domain:
+            continue
+        for d, s in zip(q.domain, sizes[q.name]):
+            steps *= max(1, -(-d // max(int(s), 1)))
+    return steps
 
 
 def _tile_ir(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]],
@@ -349,13 +430,19 @@ def _tile_ir(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]],
 
 def price(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
           vmem_budget: int = VMEM_BYTES,
-          bytes_per_word: int = 4) -> Optional[Priced]:
+          bytes_per_word: int = 4,
+          profile=False) -> Optional[Priced]:
     """Tile ``p`` with ``sizes`` and price it; None if it busts VMEM.
 
     Modeled seconds = HBM stream time of the tiled IR's main-memory
     reads, divided by the metapipeline overlap factor of its schedule
-    (``metapipeline_time`` steady state vs. sequential).
+    (``metapipeline_time`` steady state vs. sequential).  With a
+    calibration profile (``profile``: None -> the device's persisted
+    one, False -> uncalibrated), ``calibrated_seconds`` reprices the
+    same overlapped stream at the *measured* effective bandwidth plus
+    the per-pattern launch overhead per grid step.
     """
+    prof = _resolve_profile(profile)
     t = _tile_ir(p, sizes, vmem_budget // bytes_per_word)
     plan = plan_memory(t, vmem_budget_bytes=vmem_budget)
     if not plan.fits:
@@ -367,22 +454,29 @@ def price(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
             if isinstance(a.src, ir.Tensor) and a.affine:
                 return None
     tr = traffic(t)
-    seconds = tr.total_reads * bytes_per_word / HBM_BYTES_PER_S
+    seconds = stream_seconds(tr.total_reads, bytes_per_word=bytes_per_word)
     mp = build_schedule(t, vmem_budget // bytes_per_word)
     if mp is not None:
         body_words = sum(s.words for s in mp.stages if s.kind == "body")
         _, _, overlap = model_speedup(mp, flops_per_body=body_words * 100.0)
         seconds /= max(overlap, 1.0)
-    return Priced(dict(sizes), tr.total_reads, plan.total_bytes, seconds)
+    steps = grid_steps(p, sizes)
+    calibrated = calibrate.predicted_seconds(
+        type(p).__name__, seconds * HBM_BYTES_PER_S, steps, profile=prof)
+    return Priced(dict(sizes), tr.total_reads, plan.total_bytes, seconds,
+                  calibrated, steps)
 
 
 def _better(a: Priced, b: Optional[Priced]) -> bool:
-    """Lexicographic: traffic, then modeled time, then prefer reuse."""
+    """Lexicographic: traffic, then (calibrated) modeled time, then
+    prefer reuse."""
     if b is None:
         return True
-    ka = (a.traffic_words, a.modeled_seconds, -a.vmem_bytes)
-    kb = (b.traffic_words, b.modeled_seconds, -b.vmem_bytes)
-    return ka < kb
+    return _rank_key(a) < _rank_key(b)
+
+
+def _rank_key(a: Priced) -> Tuple:
+    return (a.traffic_words, a.calibrated_seconds, -a.vmem_bytes)
 
 
 # --------------------------------------------------------------------------
@@ -390,19 +484,170 @@ def _better(a: Priced, b: Optional[Priced]) -> bool:
 # --------------------------------------------------------------------------
 
 
+def shortlist(p: ir.Pattern, *,
+              vmem_budget: int = VMEM_BYTES,
+              align: int = MXU,
+              space: Optional[Dict[str, List[Tuple[int, ...]]]] = None,
+              max_points: int = MAX_POINTS,
+              profile=False
+              ) -> Tuple[List[Priced], bool, int, int]:
+    """Analytic enumeration + VMEM pruning, every feasible candidate
+    priced and sorted best-first by the lexicographic objective.
+
+    Returns ``(candidates, thinned, explored, pruned)``; the plain
+    analytic argmin is ``candidates[0]``, the hybrid mode lowers and
+    times ``candidates[:top_k]``.
+    """
+    prof = _resolve_profile(profile)
+    if space is None:
+        space = tile_space(p, align=align)
+    space, thinned = _thin(space, max_points)
+    names = sorted(space)
+
+    cands: List[Priced] = []
+    explored = pruned = 0
+    for combo in itertools.product(*(space[n] for n in names)):
+        sizes = dict(zip(names, combo))
+        priced = price(p, sizes, vmem_budget=vmem_budget,
+                       profile=prof if prof is not None else False)
+        explored += 1
+        if priced is None:
+            pruned += 1
+            continue
+        cands.append(priced)
+    cands.sort(key=_rank_key)
+    return cands, thinned, explored, pruned
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateTiming:
+    """One shortlisted candidate, actually lowered and timed."""
+
+    sizes: Dict[str, Tuple[int, ...]]
+    traffic_words: int
+    vmem_bytes: int
+    analytic_seconds: float      # uncalibrated model prediction
+    calibrated_seconds: float    # profile-adjusted model prediction
+    steps: int
+    measurement: measure_mod.Measurement
+    lowering: str                # "pallas" | "oracle" | "cached"
+
+
+def _workload_tag(p: ir.Pattern) -> str:
+    shapes = "+".join(f"{t.name}:{'x'.join(map(str, t.shape))}"
+                      for t in ir.inputs_of(p))
+    return f"{type(p).__name__}:{p.name}:{shapes}"
+
+
+def _time_candidates(p: ir.Pattern, top: List[Priced], *,
+                     vmem_budget: int, align: int,
+                     timing_db, warmup: int, repeat: int
+                     ) -> List[CandidateTiming]:
+    """Lower + time shortlisted candidates (timing-DB memoized; a
+    candidate whose lowering or execution fails is skipped, not fatal).
+    """
+    from .codegen_pallas import lower_for_timing
+
+    out: List[CandidateTiming] = []
+    for cand in top:
+        sizes_sig = tuple(sorted((k, tuple(v))
+                                 for k, v in cand.sizes.items()))
+        # identifies the computation, not its pricing: no device /
+        # profile-hash component (TimingDB adds the device itself)
+        key = pattern_key(p, vmem_budget=vmem_budget, align=align,
+                          extra=("timing", sizes_sig),
+                          device="", profile_hash="")
+        how = ["cached"]
+
+        def make_fn(sizes=cand.sizes, how=how):
+            fn, how[0] = lower_for_timing(p, sizes,
+                                          vmem_budget=vmem_budget)
+            return fn
+
+        try:
+            m = measure_mod.timed(key, make_fn, db=timing_db,
+                                  warmup=warmup, repeat=repeat)
+        except Exception:
+            continue  # candidate not executable on this backend
+        out.append(CandidateTiming(
+            sizes=dict(cand.sizes), traffic_words=cand.traffic_words,
+            vmem_bytes=cand.vmem_bytes,
+            analytic_seconds=cand.modeled_seconds,
+            calibrated_seconds=cand.calibrated_seconds,
+            steps=cand.steps, measurement=m, lowering=how[0]))
+    return out
+
+
+def _observe(p_kind: str, workload: str,
+             timings: List[CandidateTiming]) -> None:
+    samples = [calibrate.Sample(
+        workload=workload, kind=p_kind,
+        stream_bytes=t.analytic_seconds * HBM_BYTES_PER_S,
+        steps=t.steps, measured_s=t.measurement.median_s,
+        key=f"{workload}|{sorted(t.sizes.items())}")
+        for t in timings]
+    if samples:
+        calibrate.observe(samples)
+
+
+def measured_shortlist(p: ir.Pattern, *,
+                       top_k: int = TOP_K,
+                       vmem_budget: int = VMEM_BYTES,
+                       align: int = MXU,
+                       space: Optional[Dict[str, List[Tuple[int, ...]]]]
+                       = None,
+                       max_points: int = MAX_POINTS,
+                       profile=None,
+                       timing_db=None,
+                       warmup: int = MEASURE_WARMUP,
+                       repeat: int = MEASURE_REPEAT,
+                       calibrate_update: bool = True
+                       ) -> List[CandidateTiming]:
+    """Hybrid step as a library call: analytic shortlist, lower + time
+    the top-k, optionally fold the samples into the device calibration
+    profile.  ``benchmarks/run.py --measure`` builds its analytic-vs-
+    measured rank-correlation table from exactly these records.
+    """
+    cands, _, _, _ = shortlist(p, vmem_budget=vmem_budget, align=align,
+                               space=space, max_points=max_points,
+                               profile=profile)
+    timings = _time_candidates(p, cands[:max(top_k, 1)],
+                               vmem_budget=vmem_budget, align=align,
+                               timing_db=timing_db, warmup=warmup,
+                               repeat=repeat)
+    if calibrate_update:
+        _observe(type(p).__name__, _workload_tag(p), timings)
+    return timings
+
+
 def explore(p: ir.Pattern, *,
             vmem_budget: int = VMEM_BYTES,
             align: int = MXU,
             space: Optional[Dict[str, List[Tuple[int, ...]]]] = None,
             cache: Union[None, bool, str, TuningCache] = None,
-            max_points: int = MAX_POINTS) -> TilePlan:
+            max_points: int = MAX_POINTS,
+            measure: Optional[str] = None,
+            top_k: int = TOP_K,
+            timing_db=None,
+            profile=None,
+            warmup: int = MEASURE_WARMUP,
+            repeat: int = MEASURE_REPEAT) -> TilePlan:
     """Design-space exploration over tile sizes for any pattern program.
 
     ``p`` is the *untiled* program.  ``cache`` selects the tuning cache:
     ``None`` -> the default on-disk cache, a path or ``TuningCache`` ->
     that cache, ``False`` -> no caching.  Raises ``ValueError`` when no
     candidate fits the VMEM budget.
+
+    ``measure="top_k"`` (or ``REPRO_MEASURE=top_k``) switches to hybrid
+    analytic->measured mode: the analytic shortlist's top ``top_k``
+    candidates are lowered (``codegen_pallas.lower_for_timing``) and
+    timed (median-of-``repeat``, ``warmup`` excluded, memoized in the
+    device-keyed ``timing_db``), the measured argmin wins, and the
+    samples recalibrate the device profile before the plan is cached --
+    so a second call is a pure cache hit: zero lowering, zero execution.
     """
+    measure = _measure_mode(measure)
     tc = _resolve_cache(cache)
 
     if space is None:
@@ -411,38 +656,61 @@ def explore(p: ir.Pattern, *,
     names = sorted(space)
 
     # the key covers the *resolved* candidate space: a caller-restricted
-    # or thinned exploration must not share cache entries with a full one
+    # or thinned exploration must not share cache entries with a full
+    # one, nor a measured exploration with a purely analytic one
     space_sig = tuple((n, tuple(space[n])) for n in names)
-    key = pattern_key(p, vmem_budget=vmem_budget, align=align,
-                      extra=space_sig)
+    extra = space_sig + ((("measure", measure, int(top_k)),)
+                         if measure else ())
+
+    def key_now() -> str:
+        return pattern_key(p, vmem_budget=vmem_budget, align=align,
+                           extra=extra)
+
     if tc is not None:
-        hit = tc.get(key)
+        hit = tc.get(key_now())
         if hit is not None:
             return hit
 
-    best: Optional[Priced] = None
-    explored = pruned = 0
-    for combo in itertools.product(*(space[n] for n in names)):
-        sizes = dict(zip(names, combo))
-        priced = price(p, sizes, vmem_budget=vmem_budget)
-        explored += 1
-        if priced is None:
-            pruned += 1
-            continue
-        if _better(priced, best):
-            best = priced
-    if best is None:
+    # space already thinned above: keep the outer flag (re-thinning an
+    # already-thinned space is a no-op and would report False)
+    cands, _, explored, pruned = shortlist(
+        p, vmem_budget=vmem_budget, align=align, space=space,
+        max_points=max_points, profile=profile)
+    if not cands:
         raise ValueError(
             f"DSE: no tile candidate fits VMEM budget {vmem_budget} B "
             f"({explored} candidates over {names})")
 
+    measured_s = 0.0
+    timed_n = 0
+    best = cands[0]
+    if measure == "top_k":
+        timings = _time_candidates(p, cands[:max(top_k, 1)],
+                                   vmem_budget=vmem_budget, align=align,
+                                   timing_db=timing_db, warmup=warmup,
+                                   repeat=repeat)
+        _observe(type(p).__name__, _workload_tag(p), timings)
+        if timings:
+            win = min(timings,
+                      key=lambda t: (t.measurement.median_s,
+                                     t.traffic_words, -t.vmem_bytes))
+            best = Priced(win.sizes, win.traffic_words, win.vmem_bytes,
+                          win.analytic_seconds, win.calibrated_seconds,
+                          win.steps)
+            measured_s = win.measurement.median_s
+            timed_n = len(timings)
+
     plan = TilePlan(sizes={k: tuple(v) for k, v in best.sizes.items()},
                     traffic_words=best.traffic_words,
                     vmem_bytes=best.vmem_bytes,
-                    modeled_seconds=best.modeled_seconds,
-                    explored=explored, pruned=pruned, thinned=thinned)
+                    modeled_seconds=best.calibrated_seconds,
+                    explored=explored, pruned=pruned, thinned=thinned,
+                    measured=timed_n > 0, measured_seconds=measured_s,
+                    timed=timed_n)
     if tc is not None:
-        tc.put(key, plan)
+        # key recomputed AFTER the calibration update: the next call
+        # prices under the new profile hash and must hit this entry
+        tc.put(key_now(), plan)
     return plan
 
 
@@ -477,6 +745,9 @@ class PipelinePlan:
     explored: int = 0
     pruned: int = 0
     cached: bool = False
+    measured: bool = False          # winner backed by a real timing
+    measured_seconds: float = 0.0   # winner's median wall time
+    timed: int = 0                  # candidates lowered and timed
 
     def __post_init__(self):
         if not self.group_blocks:
@@ -503,6 +774,9 @@ class PipelinePlan:
             "modeled_seconds": float(self.modeled_seconds),
             "explored": int(self.explored),
             "pruned": int(self.pruned),
+            "measured": bool(self.measured),
+            "measured_seconds": float(self.measured_seconds),
+            "timed": int(self.timed),
         }
 
     @classmethod
@@ -517,20 +791,27 @@ class PipelinePlan:
                    modeled_seconds=float(d["modeled_seconds"]),
                    explored=int(d.get("explored", 0)),
                    pruned=int(d.get("pruned", 0)),
+                   measured=bool(d.get("measured", False)),
+                   measured_seconds=float(d.get("measured_seconds", 0.0)),
+                   timed=int(d.get("timed", 0)),
                    cached=True)
 
 
 def pipeline_key(pipe, *, vmem_budget: int = VMEM_BYTES,
-                 align: int = MXU, extra: Tuple = ()) -> str:
+                 align: int = MXU, extra: Tuple = (),
+                 device: Optional[str] = None,
+                 profile_hash: Optional[str] = None) -> str:
     """Tuning-cache key over the pipeline's *topological DAG*
     signature: every stage's structural signature, access descriptors,
     input tensor shapes/dtypes -- hashed in canonical topological order
-    -- plus the wiring edges, the output set and the exploration
-    constraints.  Any stage or wiring change invalidates the cached
-    joint plan; reordering the declaration of independent stages does
-    not (the DAG is the same program)."""
+    -- plus the wiring edges, the output set, the exploration
+    constraints, the device kind and the calibration-profile hash.
+    Any stage or wiring change invalidates the cached joint plan;
+    reordering the declaration of independent stages does not (the DAG
+    is the same program)."""
     from . import pipeline as plmod  # local import: keep layering thin
 
+    device, profile_hash = _key_context(device, profile_hash)
     parts = []
     for s in plmod.topo_stages(pipe):
         inputs = tuple((t.name, tuple(t.shape), t.dtype)
@@ -540,17 +821,195 @@ def pipeline_key(pipe, *, vmem_budget: int = VMEM_BYTES,
         parts.append((s.name, ir.signature(s), _reads_sig(s), inputs,
                       s.dtype, tuple(s.shape)))
     edges = tuple(sorted(set(plmod._edges(pipe))))
-    raw = repr((MODEL_VERSION, pipe.name, tuple(parts), edges,
+    raw = repr((MODEL_VERSION, device, profile_hash, pipe.name,
+                tuple(parts), edges,
                 tuple(plmod.output_names(pipe)),
                 int(vmem_budget), int(align), tuple(extra)))
     return hashlib.sha256(raw.encode()).hexdigest()[:32]
+
+
+def _pipeline_candidates(pipe, align: int, max_points: int) -> List[int]:
+    from . import pipeline as plmod  # local import: keep layering thin
+
+    sub = max(dtype_sublane(s.dtype) for s in plmod.topo_stages(pipe))
+    cands = axis_candidates(pipe.shared_extent, align, sublane=sub)
+    while len(cands) > max_points and len(cands) > 2:
+        cands = (cands[::2] if cands[-1] == cands[::2][-1]
+                 else cands[::2] + [cands[-1]])
+    return cands
+
+
+def _price_pipeline_group(sub_pipe, b: int, *, vmem_budget: int,
+                          profile, counters: Dict[str, int]):
+    """Price the sub-pipeline fused at tile ``b``: returns
+    ``(hbm_words, vmem_bytes, analytic_s, calibrated_s, steps)`` or
+    None when it busts VMEM / cannot fuse."""
+    from . import pipeline as plmod  # local import: keep layering thin
+
+    budget_words = max(vmem_budget // 4, 1)
+    try:
+        fdag = plmod.fuse_dag(sub_pipe, b, vmem_budget_words=budget_words)
+    except (ValueError, NotImplementedError):
+        return None
+    counters["explored"] += 1
+    mem = plan_memory(fdag.patterns, vmem_budget_bytes=vmem_budget)
+    if not mem.fits:
+        counters["pruned"] += 1
+        return None
+    for t in fdag.patterns:   # streaming fallback left in place
+        for q in ir.walk(t):
+            for a in q.accesses:
+                if isinstance(a.src, ir.Tensor) and a.affine:
+                    counters["pruned"] += 1
+                    return None
+    reads = sum(plmod.dag_external_reads(fdag).values())
+    out_w = plmod.output_words(sub_pipe)
+    seconds = stream_seconds(reads + out_w)
+    # overlap: most conservative terminal schedule of the kernel
+    overlaps = []
+    for t in fdag.patterns:
+        mp = build_schedule(t, budget_words)
+        if mp is not None:
+            body_words = sum(s.words for s in mp.stages
+                             if s.kind in ("body", "compute"))
+            _, _, ov = model_speedup(
+                mp, flops_per_body=body_words * 100.0)
+            overlaps.append(ov)
+    if overlaps:
+        seconds /= max(min(overlaps), 1.0)
+    steps = int(fdag.grid)
+    calibrated = calibrate.predicted_seconds(
+        "Pipeline", seconds * HBM_BYTES_PER_S, steps, profile=profile)
+    return (reads + out_w, mem.total_bytes, seconds, calibrated, steps)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineTiming:
+    """One shortlisted fused-pipeline block candidate, lowered + timed."""
+
+    block: int
+    traffic_words: int
+    vmem_bytes: int
+    analytic_seconds: float
+    calibrated_seconds: float
+    steps: int
+    measurement: measure_mod.Measurement
+    plan: "PipelinePlan"
+
+
+def _time_pipeline_candidates(pipe, priced: List[Tuple], *,
+                              vmem_budget: int, align: int,
+                              timing_db, warmup: int, repeat: int
+                              ) -> List[PipelineTiming]:
+    """Lower + time whole fused-pipeline candidates (each a fully fused
+    single-group ``PipelinePlan`` at one block size)."""
+    from . import pipeline as plmod
+    from .codegen_pallas import lower_pipeline_for_timing
+
+    n_stages = len(plmod.topo_stages(pipe))
+    unfused = plmod.unfused_traffic_words(pipe)
+    out: List[PipelineTiming] = []
+    for b, (words, vmem, s_ana, s_cal, steps) in priced:
+        variant = PipelinePlan(
+            block=int(b), groups=((0, n_stages),),
+            group_blocks=(int(b),), traffic_words=int(words),
+            unfused_traffic_words=unfused, vmem_bytes=int(vmem),
+            modeled_seconds=float(s_cal))
+        key = pipeline_key(pipe, vmem_budget=vmem_budget, align=align,
+                           extra=("timing", int(b)),
+                           device="", profile_hash="")
+
+        def make_fn(variant=variant):
+            return lower_pipeline_for_timing(pipe, variant,
+                                             vmem_budget=vmem_budget)
+
+        try:
+            m = measure_mod.timed(key, make_fn, db=timing_db,
+                                  warmup=warmup, repeat=repeat)
+        except Exception:
+            continue  # candidate not executable on this backend
+        out.append(PipelineTiming(
+            block=int(b), traffic_words=int(words), vmem_bytes=int(vmem),
+            analytic_seconds=s_ana, calibrated_seconds=s_cal,
+            steps=steps, measurement=m, plan=variant))
+    return out
+
+
+def _observe_pipeline(pipe, timings: List[PipelineTiming]) -> None:
+    samples = [calibrate.Sample(
+        workload=f"Pipeline:{pipe.name}:{pipe.shared_extent}",
+        kind="Pipeline",
+        stream_bytes=t.analytic_seconds * HBM_BYTES_PER_S,
+        steps=t.steps, measured_s=t.measurement.median_s,
+        key=f"Pipeline:{pipe.name}:{pipe.shared_extent}|b={t.block}")
+        for t in timings]
+    if samples:
+        calibrate.observe(samples)
+
+
+def _price_whole_pipeline(pipe, *, vmem_budget: int, align: int,
+                          max_points: int, profile,
+                          counters: Dict[str, int]) -> List[Tuple]:
+    """Every feasible fully fused block candidate, priced and sorted
+    best-first (the analytic shortlist of the whole DAG)."""
+    from . import pipeline as plmod
+
+    n_stages = len(plmod.topo_stages(pipe))
+    try:
+        whole = plmod.sub_pipeline(pipe, 0, n_stages)
+    except (ValueError, NotImplementedError):
+        return []
+    priced = []
+    for b in _pipeline_candidates(pipe, align, max_points):
+        res = _price_pipeline_group(whole, b, vmem_budget=vmem_budget,
+                                    profile=profile, counters=counters)
+        if res is not None:
+            priced.append((b, res))
+    priced.sort(key=lambda t: (t[1][0], t[1][3], -t[1][1]))
+    return priced
+
+
+def measured_pipeline_shortlist(pipe, *,
+                                top_k: int = TOP_K,
+                                vmem_budget: int = VMEM_BYTES,
+                                align: int = MXU,
+                                max_points: int = MAX_POINTS,
+                                profile=None,
+                                timing_db=None,
+                                warmup: int = MEASURE_WARMUP,
+                                repeat: int = MEASURE_REPEAT,
+                                calibrate_update: bool = True,
+                                priced: Optional[List[Tuple]] = None
+                                ) -> List[PipelineTiming]:
+    """Hybrid step for a pipeline DAG: analytically shortlist fully
+    fused block candidates, lower the top-k whole megakernels, time
+    them, optionally fold the samples into the calibration profile.
+    ``priced`` reuses an already-computed shortlist (``explore_pipeline``
+    passes its DP's whole-range pricing) instead of re-pricing."""
+    if priced is None:
+        priced = _price_whole_pipeline(
+            pipe, vmem_budget=vmem_budget, align=align,
+            max_points=max_points, profile=_resolve_profile(profile),
+            counters={"explored": 0, "pruned": 0})
+    timings = _time_pipeline_candidates(
+        pipe, priced[:max(top_k, 1)], vmem_budget=vmem_budget,
+        align=align, timing_db=timing_db, warmup=warmup, repeat=repeat)
+    if calibrate_update:
+        _observe_pipeline(pipe, timings)
+    return timings
 
 
 def explore_pipeline(pipe, *,
                      vmem_budget: int = VMEM_BYTES,
                      align: int = MXU,
                      cache: Union[None, bool, str, TuningCache] = None,
-                     max_points: int = MAX_POINTS) -> PipelinePlan:
+                     max_points: int = MAX_POINTS,
+                     measure: Optional[str] = None,
+                     top_k: int = TOP_K,
+                     timing_db=None,
+                     profile=None,
+                     warmup: int = MEASURE_WARMUP,
+                     repeat: int = MEASURE_REPEAT) -> PipelinePlan:
     """Joint design-space exploration for a pattern pipeline DAG.
 
     One tile candidate set is enumerated for the shared streaming
@@ -562,64 +1021,47 @@ def explore_pipeline(pipe, *,
     VMEM the DAG is split into contiguous topological groups at the
     cheapest cuts, each group free to pick its *own* block size (the
     split paths need not agree); every cut intermediate round-trips
-    HBM.  Results are cached keyed on the topological DAG signature.
+    HBM.  Results are cached keyed on the topological DAG signature
+    (+ device kind + calibration-profile hash).
+
+    ``measure="top_k"`` (or ``REPRO_MEASURE=top_k``): when the analytic
+    winner is fully fused, the top-k block candidates are lowered as
+    whole megakernels and timed; the measured argmin wins and the
+    samples update the device calibration profile before the plan is
+    cached.  A split-fallback winner keeps the analytic choice (its
+    groups execute as separate kernels; timing them jointly would
+    conflate the cut traffic with tile effects).
     """
     from . import pipeline as plmod  # local import: keep layering thin
 
+    measure = _measure_mode(measure)
+    prof = _resolve_profile(profile)
     tc = _resolve_cache(cache)
-    budget_words = max(vmem_budget // 4, 1)
     topo = plmod.topo_stages(pipe)
     n_stages = len(topo)
-    sub = max(dtype_sublane(s.dtype) for s in topo)
-    cands = axis_candidates(pipe.shared_extent, align, sublane=sub)
-    while len(cands) > max_points and len(cands) > 2:
-        cands = (cands[::2] if cands[-1] == cands[::2][-1]
-                 else cands[::2] + [cands[-1]])
+    cands = _pipeline_candidates(pipe, align, max_points)
 
-    key = pipeline_key(pipe, vmem_budget=vmem_budget, align=align,
-                       extra=(tuple(cands),))
+    extra: Tuple = (tuple(cands),)
+    if measure:
+        extra += (("measure", measure, int(top_k)),)
+
+    def key_now() -> str:
+        return pipeline_key(pipe, vmem_budget=vmem_budget, align=align,
+                            extra=extra)
+
     if tc is not None:
-        hit = tc.get(key, PipelinePlan)
+        hit = tc.get(key_now(), PipelinePlan)
         if hit is not None:
             return hit
 
     counters = {"explored": 0, "pruned": 0}
 
-    def price_group(sub_pipe, b: int):
-        """(hbm_words, vmem_bytes, seconds) of the sub-pipeline fused
-        at tile ``b``; None when it busts VMEM / cannot fuse."""
-        try:
-            fdag = plmod.fuse_dag(sub_pipe, b,
-                                  vmem_budget_words=budget_words)
-        except (ValueError, NotImplementedError):
-            return None
-        counters["explored"] += 1
-        mem = plan_memory(fdag.patterns, vmem_budget_bytes=vmem_budget)
-        if not mem.fits:
-            counters["pruned"] += 1
-            return None
-        for t in fdag.patterns:   # streaming fallback left in place
-            for q in ir.walk(t):
-                for a in q.accesses:
-                    if isinstance(a.src, ir.Tensor) and a.affine:
-                        counters["pruned"] += 1
-                        return None
-        reads = sum(plmod.dag_external_reads(fdag).values())
-        out_w = plmod.output_words(sub_pipe)
-        seconds = (reads + out_w) * 4 / HBM_BYTES_PER_S
-        # overlap: most conservative terminal schedule of the kernel
-        overlaps = []
-        for t in fdag.patterns:
-            mp = build_schedule(t, budget_words)
-            if mp is not None:
-                body_words = sum(s.words for s in mp.stages
-                                 if s.kind in ("body", "compute"))
-                _, _, ov = model_speedup(
-                    mp, flops_per_body=body_words * 100.0)
-                overlaps.append(ov)
-        if overlaps:
-            seconds /= max(min(overlaps), 1.0)
-        return (reads + out_w, mem.total_bytes, seconds)
+    # the fully fused (whole-range) candidates are priced once and
+    # shared: they seed the DP's (0, n) entry AND the measured
+    # shortlist below (no duplicate fuse_dag/plan_memory work)
+    priced_whole = _price_whole_pipeline(
+        pipe, vmem_budget=vmem_budget, align=align,
+        max_points=max_points, profile=prof, counters=counters)
 
     def best_group(i0: int, i1: int, memo: Dict):
         """Per-group block choice: cheapest (words, seconds, vmem,
@@ -637,12 +1079,14 @@ def explore_pipeline(pipe, *,
             sub_pipe = None
         if sub_pipe is not None:
             for b in cands:
-                priced = price_group(sub_pipe, b)
+                priced = _price_pipeline_group(
+                    sub_pipe, b, vmem_budget=vmem_budget, profile=prof,
+                    counters=counters)
                 if priced is None:
                     continue
-                rank = (priced[0], priced[2], -priced[1])
+                rank = (priced[0], priced[3], -priced[1])
                 if best is None or rank < (best[0], best[1], -best[2]):
-                    best = (priced[0], priced[2], priced[1], b)
+                    best = (priced[0], priced[3], priced[1], b)
         memo[(i0, i1)] = best
         return best
 
@@ -650,6 +1094,11 @@ def explore_pipeline(pipe, *,
     # preferred on ties (the j == 0 single-group candidate is tried
     # first and later candidates must be strictly cheaper)
     memo: Dict = {}
+    if priced_whole:
+        b, (words, vmem, _, s_cal, _) = priced_whole[0]
+        memo[(0, n_stages)] = (words, s_cal, vmem, b)
+    else:
+        memo[(0, n_stages)] = None
     state: List = [None] * (n_stages + 1)
     state[0] = (0, 0.0, 0, (), ())   # words, seconds, vmem, groups, blocks
     for i in range(1, n_stages + 1):
@@ -678,8 +1127,33 @@ def explore_pipeline(pipe, *,
         unfused_traffic_words=plmod.unfused_traffic_words(pipe),
         vmem_bytes=int(best[2]), modeled_seconds=float(best[1]),
         explored=counters["explored"], pruned=counters["pruned"])
+
+    if measure == "top_k" and plan.fused:
+        # the resolved profile (prof=None means "uncalibrated", whether
+        # from an explicit False or from no profile on disk) must not
+        # re-resolve back to the on-disk profile downstream
+        timings = measured_pipeline_shortlist(
+            pipe, top_k=top_k, vmem_budget=vmem_budget, align=align,
+            max_points=max_points,
+            profile=prof if prof is not None else False,
+            timing_db=timing_db, warmup=warmup, repeat=repeat,
+            priced=priced_whole)
+        if timings:
+            win = min(timings,
+                      key=lambda t: (t.measurement.median_s,
+                                     t.traffic_words, -t.vmem_bytes))
+            plan = dataclasses.replace(
+                win.plan,
+                unfused_traffic_words=plan.unfused_traffic_words,
+                explored=counters["explored"], pruned=counters["pruned"],
+                measured=True,
+                measured_seconds=win.measurement.median_s,
+                timed=len(timings))
+
     if tc is not None:
-        tc.put(key, plan)
+        # key recomputed AFTER any calibration update: the next call
+        # prices under the new profile hash and must hit this entry
+        tc.put(key_now(), plan)
     return plan
 
 
@@ -786,30 +1260,33 @@ def _one(plan: TilePlan, name: str) -> Tuple[int, ...]:
 
 def select_gemm_blocks(m: int, n: int, k: int, *,
                        vmem_budget: int = VMEM_BYTES, align: int = MXU,
-                       cache: Union[None, bool, str, TuningCache] = None
+                       cache: Union[None, bool, str, TuningCache] = None,
+                       measure: Optional[str] = None
                        ) -> Tuple[Tuple[int, int, int], TilePlan]:
     plan = explore(gemm_program(m, n, k), vmem_budget=vmem_budget,
-                   align=align, cache=cache)
+                   align=align, cache=cache, measure=measure)
     (bm, bn), (bk,) = _one(plan, "gemm"), _one(plan, "gemm_k")
     return (bm, bn, bk), plan
 
 
 def select_attention_blocks(sq: int, sk: int, d: int, *,
                             vmem_budget: int = VMEM_BYTES, align: int = MXU,
-                            cache: Union[None, bool, str, TuningCache] = None
+                            cache: Union[None, bool, str, TuningCache] = None,
+                            measure: Optional[str] = None
                             ) -> Tuple[Tuple[int, int], TilePlan]:
     plan = explore(attention_program(sq, sk, d), vmem_budget=vmem_budget,
-                   align=align, cache=cache)
+                   align=align, cache=cache, measure=measure)
     (bq,), (bk,) = _one(plan, "fa_q"), _one(plan, "fa_kv")
     return (bq, bk), plan
 
 
 def select_scan_blocks(seq: int, n: int, dh: int, *,
                        vmem_budget: int = VMEM_BYTES, align: int = MXU,
-                       cache: Union[None, bool, str, TuningCache] = None
+                       cache: Union[None, bool, str, TuningCache] = None,
+                       measure: Optional[str] = None
                        ) -> Tuple[int, TilePlan]:
     plan = explore(scan_program(seq, n, dh), vmem_budget=vmem_budget,
-                   align=align, cache=cache)
+                   align=align, cache=cache, measure=measure)
     (chunk,) = _one(plan, "ssd")
     return chunk, plan
 
@@ -818,20 +1295,23 @@ def select_filter_reduce_blocks(t: int, *,
                                 vmem_budget: int = VMEM_BYTES,
                                 align: int = MXU,
                                 cache: Union[None, bool, str,
-                                             TuningCache] = None
+                                             TuningCache] = None,
+                                measure: Optional[str] = None
                                 ) -> Tuple[int, TilePlan]:
     plan = explore(filter_reduce_program(t), vmem_budget=vmem_budget,
-                   align=align, cache=cache)
+                   align=align, cache=cache, measure=measure)
     (bt,) = _one(plan, "fr")
     return bt, plan
 
 
 def select_groupby_blocks(t: int, num_keys: int, ew: int, *,
                           vmem_budget: int = VMEM_BYTES, align: int = MXU,
-                          cache: Union[None, bool, str, TuningCache] = None
+                          cache: Union[None, bool, str, TuningCache] = None,
+                          measure: Optional[str] = None
                           ) -> Tuple[int, TilePlan]:
     plan = explore(groupby_program(t, num_keys, ew),
-                   vmem_budget=vmem_budget, align=align, cache=cache)
+                   vmem_budget=vmem_budget, align=align, cache=cache,
+                   measure=measure)
     (bt,) = _one(plan, "gbf")
     return bt, plan
 
@@ -861,19 +1341,21 @@ def filter_fold_pipeline(t: int):
 
 def select_fused_filter_fold_blocks(
         t: int, *, vmem_budget: int = VMEM_BYTES, align: int = MXU,
-        cache: Union[None, bool, str, TuningCache] = None
+        cache: Union[None, bool, str, TuningCache] = None,
+        measure: Optional[str] = None
         ) -> Tuple[int, PipelinePlan]:
     """Joint-DSE streaming tile for the fused filter+fold megakernel."""
     plan = explore_pipeline(filter_fold_pipeline(t),
                             vmem_budget=vmem_budget, align=align,
-                            cache=cache)
+                            cache=cache, measure=measure)
     return plan.block, plan
 
 
 def select_fused_kmeans_blocks(
         n: int, k: int, d: int, *, vmem_budget: int = VMEM_BYTES,
         align: int = MXU,
-        cache: Union[None, bool, str, TuningCache] = None
+        cache: Union[None, bool, str, TuningCache] = None,
+        measure: Optional[str] = None
         ) -> Tuple[int, PipelinePlan]:
     """Joint-DSE streaming tile for the fused k-means DAG megakernel
     (assign -> {scatter-sum, count}; one plan for the whole DAG, cached
@@ -881,5 +1363,5 @@ def select_fused_kmeans_blocks(
     from repro.patterns.analytics import kmeans_pipeline
     pipe, _, _ = kmeans_pipeline(n, k, d)
     plan = explore_pipeline(pipe, vmem_budget=vmem_budget, align=align,
-                            cache=cache)
+                            cache=cache, measure=measure)
     return plan.block, plan

@@ -19,9 +19,9 @@ INTERPRET = True
 
 
 @functools.lru_cache(maxsize=None)
-def _auto_blocks(t: int) -> int:
+def _auto_blocks(t: int, measure: Optional[str] = None) -> int:
     from repro.core.dse import select_filter_reduce_blocks
-    bt, _ = select_filter_reduce_blocks(t)
+    bt, _ = select_filter_reduce_blocks(t, measure=measure)
     return bt
 
 
@@ -40,12 +40,14 @@ def _fr_kernel(x_ref, w_ref, lo_ref, hi_ref, o_ref):
 
 def filter_reduce(x: jax.Array, weight: jax.Array, lo, hi, *,
                   block_t: int = 1024, auto_tile: bool = False,
+                  measure: Optional[str] = None,
                   interpret: Optional[bool] = None) -> jax.Array:
     """``auto_tile=True`` picks block_t by DSE on the fused filter+fold
-    proxy (``repro.core.dse.filter_reduce_program``)."""
+    proxy (``repro.core.dse.filter_reduce_program``); ``measure="top_k"``
+    backs the choice with real timings (hybrid DSE)."""
     (t,) = x.shape
     if auto_tile:
-        block_t = _auto_blocks(t)
+        block_t = _auto_blocks(t, measure)
     block_t = min(block_t, t)
     assert t % block_t == 0
     lo = jnp.asarray([lo], jnp.float32)

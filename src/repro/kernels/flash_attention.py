@@ -25,9 +25,10 @@ NEG_INF = -1e30
 
 
 @functools.lru_cache(maxsize=None)
-def _auto_blocks(sq: int, sk: int, d: int) -> tuple:
+def _auto_blocks(sq: int, sk: int, d: int,
+                 measure: Optional[str] = None) -> tuple:
     from repro.core.dse import select_attention_blocks
-    blocks, _ = select_attention_blocks(sq, sk, d)
+    blocks, _ = select_attention_blocks(sq, sk, d, measure=measure)
     return blocks
 
 
@@ -77,6 +78,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
                     auto_tile: bool = False,
+                    measure: Optional[str] = None,
                     interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
 
@@ -91,7 +93,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     group = hq // hkv
     scale = scale if scale is not None else d ** -0.5
     if auto_tile:
-        block_q, block_k = _auto_blocks(sq, sk, d)
+        block_q, block_k = _auto_blocks(sq, sk, d, measure)
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     assert sq % block_q == 0 and sk % block_k == 0

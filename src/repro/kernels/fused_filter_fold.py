@@ -23,9 +23,9 @@ INTERPRET = True
 
 
 @functools.lru_cache(maxsize=None)
-def _auto_blocks(t: int) -> int:
+def _auto_blocks(t: int, measure: Optional[str] = None) -> int:
     from repro.core.dse import select_fused_filter_fold_blocks
-    bt, _ = select_fused_filter_fold_blocks(t)
+    bt, _ = select_fused_filter_fold_blocks(t, measure=measure)
     return bt
 
 
@@ -47,15 +47,17 @@ def _ff_kernel(x_ref, w_ref, lo_ref, hi_ref, o_ref, mask_ref):
 
 def fused_filter_fold(x: jax.Array, weight: jax.Array, lo, hi, *,
                       block_t: int = 1024, auto_tile: bool = False,
+                      measure: Optional[str] = None,
                       interpret: Optional[bool] = None) -> jax.Array:
     """``sum(where(lo <= x < hi, x * weight, 0))`` as a fused two-stage
     megakernel.  ``auto_tile=True`` picks ``block_t`` by *joint* DSE on
     the filter+fold pipeline (``core.dse.select_fused_filter_fold_blocks``
-    -- one plan for the whole chain, cached on the pipeline signature).
+    -- one plan for the whole chain, cached on the pipeline signature);
+    ``measure="top_k"`` backs it with real timings (hybrid DSE).
     """
     (t,) = x.shape
     if auto_tile:
-        block_t = _auto_blocks(t)
+        block_t = _auto_blocks(t, measure)
     block_t = min(block_t, t)
     assert t % block_t == 0
     lo = jnp.asarray([lo], jnp.float32)

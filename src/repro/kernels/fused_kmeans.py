@@ -29,9 +29,10 @@ INTERPRET = True
 
 
 @functools.lru_cache(maxsize=None)
-def _auto_blocks(n: int, k: int, d: int) -> int:
+def _auto_blocks(n: int, k: int, d: int,
+                 measure: Optional[str] = None) -> int:
     from repro.core.dse import select_fused_kmeans_blocks
-    bn, _ = select_fused_kmeans_blocks(n, k, d)
+    bn, _ = select_fused_kmeans_blocks(n, k, d, measure=measure)
     return bn
 
 
@@ -59,6 +60,7 @@ def _km_kernel(pts_ref, cents_ref, sums_ref, counts_ref, assign_ref):
 
 def fused_kmeans_step(points: jax.Array, centroids: jax.Array, *,
                       block_n: int = 128, auto_tile: bool = False,
+                      measure: Optional[str] = None,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array]:
     """One k-means update step as a single two-output megakernel:
@@ -71,7 +73,7 @@ def fused_kmeans_step(points: jax.Array, centroids: jax.Array, *,
     k, d2 = centroids.shape
     assert d == d2, (points.shape, centroids.shape)
     if auto_tile:
-        block_n = _auto_blocks(n, k, d)
+        block_n = _auto_blocks(n, k, d, measure)
     block_n = min(block_n, n)
     assert n % block_n == 0
     sums, counts = pl.pallas_call(

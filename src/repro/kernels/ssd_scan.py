@@ -24,9 +24,10 @@ INTERPRET = True
 
 
 @functools.lru_cache(maxsize=None)
-def _auto_blocks(seq: int, n: int, dh: int) -> int:
+def _auto_blocks(seq: int, n: int, dh: int,
+                 measure: Optional[str] = None) -> int:
     from repro.core.dse import select_scan_blocks
-    chunk, _ = select_scan_blocks(seq, n, dh)
+    chunk, _ = select_scan_blocks(seq, n, dh, measure=measure)
     return chunk
 
 
@@ -68,6 +69,7 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
 
 def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
              C: jax.Array, *, chunk: int = 128, auto_tile: bool = False,
+             measure: Optional[str] = None,
              interpret: Optional[bool] = None) -> jax.Array:
     """See ref.ssd_scan for semantics.  seq must divide ``chunk``.
 
@@ -76,7 +78,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
     bsz, seq, h, dh = x.shape
     n = B.shape[-1]
     if auto_tile:
-        chunk = _auto_blocks(seq, n, dh)
+        chunk = _auto_blocks(seq, n, dh, measure)
     chunk = min(chunk, seq)
     assert seq % chunk == 0, (seq, chunk)
     nc = seq // chunk

@@ -3,7 +3,12 @@ import pytest
 
 @pytest.fixture(autouse=True)
 def _isolated_dse_cache(tmp_path, monkeypatch):
-    """Keep the DSE tuning cache per-test: auto_tile paths and the
-    autotile front-end default to the persistent on-disk cache, and a
-    stale ~/.cache entry must never feed an assertion."""
+    """Keep the DSE tuning cache, timing DB and calibration profile
+    per-test: auto_tile paths default to the persistent on-disk stores,
+    and a stale ~/.cache entry (or a calibration profile fitted by an
+    earlier run) must never feed an assertion."""
     monkeypatch.setenv("REPRO_DSE_CACHE", str(tmp_path / "dse.json"))
+    monkeypatch.setenv("REPRO_TIMING_DB", str(tmp_path / "timing.json"))
+    monkeypatch.setenv("REPRO_CALIB_PROFILE",
+                       str(tmp_path / "calibration.json"))
+    monkeypatch.delenv("REPRO_MEASURE", raising=False)

@@ -1,0 +1,140 @@
+"""The cost-model calibration subsystem (repro.core.calibrate).
+
+Covers the ISSUE-5 acceptance surface: the least-squares fit is
+deterministic (same samples -> bit-for-bit identical coefficients),
+recovers planted coefficients, falls back to the rank-preserving
+bandwidth rescale when the affine model orders candidates worse, and
+profiles persist / invalidate keyed by device + cost-model revision.
+"""
+import pytest
+
+from repro.core import calibrate, dse
+from repro.core.cost import HBM_BYTES_PER_S
+
+
+def _samples():
+    """Fixed synthetic ledger: two workloads, planted coefficients
+    s_per_byte=2e-9 (500 GB/s effective), overhead 3us/step (MultiFold)
+    and 7us/step (Pipeline)."""
+    s, o_mf, o_pl = 2e-9, 3e-6, 7e-6
+    out = []
+    for i, (b, st) in enumerate([(1e6, 8), (2e6, 4), (4e6, 2)]):
+        out.append(calibrate.Sample(
+            workload="w1", kind="MultiFold", stream_bytes=b, steps=st,
+            measured_s=s * b + o_mf * st, key=f"w1/{i}"))
+    for i, (b, st) in enumerate([(5e5, 16), (1e6, 8), (8e6, 1)]):
+        out.append(calibrate.Sample(
+            workload="w2", kind="Pipeline", stream_bytes=b, steps=st,
+            measured_s=s * b + o_pl * st, key=f"w2/{i}"))
+    return out
+
+
+def test_fit_recovers_planted_coefficients():
+    prof = calibrate.fit(_samples(), device="testdev")
+    assert prof.mode == "affine"
+    assert abs(prof.s_per_byte - 2e-9) / 2e-9 < 1e-6
+    assert abs(prof.overhead_s["MultiFold"] - 3e-6) / 3e-6 < 1e-6
+    assert abs(prof.overhead_s["Pipeline"] - 7e-6) / 7e-6 < 1e-6
+    assert prof.mean_abs_err_s < 1e-9
+    assert prof.n_samples == 6
+
+
+def test_fit_is_deterministic_bit_for_bit():
+    a = calibrate.fit(_samples(), device="testdev")
+    b = calibrate.fit(list(reversed(_samples())), device="testdev")
+    # same sample *set* -> identical floats, not merely close ones:
+    # cached plans and CI cache keys hash these exact values
+    assert a.s_per_byte.hex() == b.s_per_byte.hex()
+    for k in a.overhead_s:
+        assert a.overhead_s[k].hex() == b.overhead_s[k].hex()
+    assert a.hash == b.hash
+
+
+def test_fit_negative_bandwidth_falls_back_to_scale():
+    """Measured times *decreasing* in bytes would fit a negative
+    bandwidth; the guard keeps the profile physical and
+    rank-preserving."""
+    samples = [calibrate.Sample(
+        workload="w", kind="Map", stream_bytes=b, steps=1,
+        measured_s=m, key=f"k{b}")
+        for b, m in [(1e6, 3e-3), (2e6, 2e-3), (4e6, 1e-3)]]
+    prof = calibrate.fit(samples, device="testdev")
+    assert prof.mode == "scale"
+    assert prof.s_per_byte > 0
+    assert all(v == 0.0 for v in prof.overhead_s.values())
+
+
+def test_fit_empty_raises():
+    with pytest.raises(ValueError):
+        calibrate.fit([])
+
+
+def test_predicted_seconds_uncalibrated_is_datasheet():
+    assert calibrate.predicted_seconds("Map", 819e9) \
+        == pytest.approx(819e9 / HBM_BYTES_PER_S)
+    prof = calibrate.fit(_samples(), device="testdev")
+    got = calibrate.predicted_seconds("MultiFold", 1e6, 8, profile=prof)
+    assert got == pytest.approx(2e-9 * 1e6 + 3e-6 * 8, rel=1e-5)
+    # unknown pattern kind: bandwidth term only, no invented overhead
+    assert calibrate.predicted_seconds("Unknown", 1e6, 8, profile=prof) \
+        == pytest.approx(prof.s_per_byte * 1e6, rel=1e-6)
+
+
+def test_observe_roundtrip_and_hash_tracking():
+    assert calibrate.load_profile() is None
+    assert calibrate.active_profile_hash() == calibrate.UNCALIBRATED
+
+    prof = calibrate.observe(_samples())
+    assert calibrate.active_profile_hash() == prof.hash
+    loaded = calibrate.load_profile()
+    assert loaded is not None
+    assert loaded.s_per_byte == prof.s_per_byte
+    assert loaded.overhead_s == prof.overhead_s
+
+    # observing identical samples dedupes: profile (and hash) stable
+    again = calibrate.observe(_samples())
+    assert again.n_samples == prof.n_samples
+    assert again.hash == prof.hash
+
+    # new evidence -> new profile -> new hash (DSE cache keys roll over)
+    extra = calibrate.Sample(workload="w3", kind="Map",
+                             stream_bytes=3e6, steps=2,
+                             measured_s=9e-3, key="w3/0")
+    updated = calibrate.observe([extra])
+    assert updated.n_samples == prof.n_samples + 1
+    assert calibrate.active_profile_hash() == updated.hash != prof.hash
+
+
+def test_profile_for_other_device_or_model_version_ignored(tmp_path):
+    path = str(tmp_path / "prof.json")
+    calibrate.observe(_samples(), device="devA", path=path)
+    assert calibrate.load_profile("devA", path=path) is not None
+    assert calibrate.load_profile("devB", path=path) is None
+
+    stale = calibrate.fit(_samples(), device="devA",
+                          model_version=dse.MODEL_VERSION - 1)
+    import json
+    with open(path, "w") as f:
+        json.dump({"profile": stale.to_json(), "samples": []}, f)
+    assert calibrate.load_profile("devA", path=path) is None
+
+
+def test_fit_weights_small_workloads_fairly():
+    """A 90 ms workload must not flatten a 500 us workload's
+    coefficients: after the relative-error weighting, the small
+    workload's in-sample ranking must be preserved too."""
+    big = [calibrate.Sample(
+        workload="big", kind="MultiFold", stream_bytes=b, steps=st,
+        measured_s=2e-9 * b + 1e-4 * st, key=f"b{st}")
+        for b, st in [(1e9, 8), (2e9, 4), (4e9, 2)]]
+    small = [calibrate.Sample(
+        workload="small", kind="Pipeline", stream_bytes=1e5, steps=st,
+        measured_s=2e-9 * 1e5 + 5e-5 * st, key=f"s{st}")
+        for st in (16, 8, 4, 2)]
+    prof = calibrate.fit(big + small, device="testdev")
+    pred = [calibrate.predicted_seconds("Pipeline", s.stream_bytes,
+                                        s.steps, profile=prof)
+            for s in small]
+    meas = [s.measured_s for s in small]
+    from repro.core.measure import spearman
+    assert spearman(pred, meas) == 1.0

@@ -1,0 +1,269 @@
+"""The measured-timing subsystem (repro.core.measure) and the hybrid
+analytic->measured DSE paths that consume it.
+
+Covers the ISSUE-5 acceptance surface: warmup exclusion (compile time
+never pollutes steady-state medians), timing-DB round-trip and
+memoization (a cache-warm exploration does zero lowering and zero
+execution), the interpret-mode fallback on CPU, and the measured
+``explore``/``explore_pipeline`` modes.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import dse, ir, measure
+
+jax = pytest.importorskip("jax")
+
+
+# --------------------------------------------------------------- measure()
+def test_measure_excludes_warmup_and_reports_median():
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        if calls["n"] == 1:          # "compile": must not be timed
+            time.sleep(0.05)
+        return calls["n"]
+
+    m = measure.measure(fn, warmup=1, repeat=3)
+    assert calls["n"] == 4           # warmup ran, just untimed
+    assert m.median_s < 0.05         # the sleep was excluded
+    assert m.repeat == 3 and m.warmup == 1
+    assert m.min_s <= m.median_s <= m.max_s
+    assert not m.cached
+
+
+def test_measure_validates_arguments():
+    with pytest.raises(ValueError):
+        measure.measure(lambda: None, repeat=0)
+    with pytest.raises(ValueError):
+        measure.measure(lambda: None, warmup=-1)
+
+
+def test_measurement_records_device_and_interpret_mode():
+    m = measure.measure(lambda: 1, warmup=0, repeat=1)
+    assert m.device == measure.device_kind()
+    assert m.interpret == measure.interpret_mode()
+
+
+# --------------------------------------------------------------- TimingDB
+def test_timing_db_roundtrip(tmp_path):
+    path = str(tmp_path / "db.json")
+    db = measure.TimingDB(path)
+    m = measure.measure(lambda: 1, warmup=0, repeat=2)
+    db.put("k1", m)
+
+    fresh = measure.TimingDB(path)   # new instance, same file
+    got = fresh.get("k1")
+    assert got is not None and got.cached
+    assert got.median_s == m.median_s
+    assert got.repeat == m.repeat
+    assert fresh.get("other") is None
+
+
+def test_timing_db_keys_are_device_and_interpret_scoped():
+    k = measure.TimingDB.full_key("abc")
+    assert measure.device_kind() in k
+    assert f"interp={int(measure.interpret_mode())}" in k
+    # a compiled-TPU timing can never alias an interpreted-CPU one
+    assert measure.TimingDB.full_key("abc", device="tpu-v5e",
+                                     interpret=False) != k
+
+
+def test_timing_db_corrupt_file_reads_as_empty(tmp_path):
+    path = tmp_path / "db.json"
+    path.write_text("{not json")
+    db = measure.TimingDB(str(path))
+    assert db.get("k") is None
+    db.put("k", measure.measure(lambda: 1, warmup=0, repeat=1))
+    assert measure.TimingDB(str(path)).get("k") is not None
+
+
+def test_timed_memoizes_and_skips_lowering_on_hit(tmp_path):
+    db = measure.TimingDB(str(tmp_path / "db.json"))
+    built = {"n": 0}
+
+    def make_fn():
+        built["n"] += 1
+        return lambda: 1
+
+    m1 = measure.timed("key", make_fn, db=db, warmup=0, repeat=1)
+    assert built["n"] == 1 and not m1.cached
+    m2 = measure.timed("key", make_fn, db=db, warmup=0, repeat=1)
+    assert built["n"] == 1           # DB hit: thunk never invoked
+    assert m2.cached and m2.median_s == m1.median_s
+
+
+# --------------------------------------------------------- synth inputs
+def test_synth_inputs_deterministic_and_typed():
+    tensors = (ir.Tensor("x", (8, 4)), ir.Tensor("k", (8,), "int32"))
+    a = measure.synth_inputs(tensors)
+    b = measure.synth_inputs(tensors)
+    assert a["x"].shape == (8, 4) and a["x"].dtype == np.float32
+    assert a["k"].dtype == np.int32
+    assert int(a["k"].min()) >= 0    # keys stay one-hot-safe
+    np.testing.assert_array_equal(np.asarray(a["x"]), np.asarray(b["x"]))
+    np.testing.assert_array_equal(np.asarray(a["k"]), np.asarray(b["k"]))
+
+
+# ------------------------------------------------------------- spearman
+def test_spearman():
+    assert measure.spearman([1, 2, 3], [10, 20, 30]) == 1.0
+    assert measure.spearman([1, 2, 3], [30, 20, 10]) == -1.0
+    assert measure.spearman([1.0, 1.0], [1.0, 1.0]) == 1.0   # both tied
+    assert measure.spearman([1.0, 1.0], [1.0, 2.0]) == 0.0
+    assert measure.spearman([5], [7]) == 1.0
+    assert abs(measure.spearman([1, 2, 3, 4], [1, 3, 2, 4]) - 0.8) < 1e-9
+    with pytest.raises(ValueError):
+        measure.spearman([1], [1, 2])
+
+
+# ------------------------------------------- lower_for_timing (interpret)
+def test_lower_for_timing_runs_on_cpu_interpret():
+    """The CPU container times interpret-mode kernels: the fallback the
+    ISSUE requires.  filter_reduce's proxy has no Pallas template for
+    its tiled fold, so it must route to the jitted oracle."""
+    from repro.core.codegen_pallas import lower_for_timing
+
+    p = dse.filter_reduce_program(512)
+    fn, how = lower_for_timing(p, {"fr": (128,)})
+    assert how in ("pallas", "oracle")
+    out = jax.block_until_ready(fn())
+    assert np.isfinite(float(np.asarray(out)))
+    m = measure.measure(fn, warmup=1, repeat=2)
+    assert m.median_s > 0
+
+
+# ----------------------------------------------------- hybrid explore()
+def test_explore_measured_returns_timed_plan(tmp_path):
+    p = dse.filter_reduce_program(1024)
+    plan = dse.explore(p, cache=str(tmp_path / "cache.json"),
+                       timing_db=str(tmp_path / "db.json"),
+                       measure="top_k", top_k=2, warmup=1, repeat=1)
+    assert plan.measured
+    assert plan.timed >= 1
+    assert plan.measured_seconds > 0
+    assert "fr" in plan.sizes
+
+
+def test_explore_measured_second_call_zero_lowering(tmp_path, monkeypatch):
+    from repro.core import codegen_pallas
+
+    p = dse.filter_reduce_program(1024)
+    kw = dict(cache=str(tmp_path / "cache.json"),
+              timing_db=str(tmp_path / "db.json"),
+              measure="top_k", top_k=2, warmup=1, repeat=1)
+    plan1 = dse.explore(p, **kw)
+
+    def boom(*a, **k):
+        raise AssertionError("second exploration must not lower")
+
+    monkeypatch.setattr(codegen_pallas, "lower_for_timing", boom)
+    plan2 = dse.explore(p, **kw)
+    assert plan2.cached
+    assert plan2.sizes == plan1.sizes
+    assert plan2.measured and plan2.measured_seconds > 0
+
+
+def test_explore_measured_updates_calibration_profile(tmp_path):
+    from repro.core import calibrate
+
+    assert calibrate.load_profile() is None
+    assert calibrate.active_profile_hash() == calibrate.UNCALIBRATED
+    p = dse.filter_reduce_program(1024)
+    dse.explore(p, cache=False, timing_db=str(tmp_path / "db.json"),
+                measure="top_k", top_k=2, warmup=1, repeat=1)
+    prof = calibrate.load_profile()
+    assert prof is not None and prof.n_samples >= 1
+    assert calibrate.active_profile_hash() == prof.hash
+
+
+def test_recalibration_invalidates_tuning_cache(tmp_path):
+    """Satellite: the cache key carries device kind + profile hash, so
+    a tuned plan goes stale the moment the calibration changes."""
+    from repro.core import calibrate
+
+    p = dse.filter_reduce_program(2048)
+    cache = str(tmp_path / "cache.json")
+    dse.explore(p, cache=cache)
+    assert dse.explore(p, cache=cache).cached
+
+    calibrate.observe([calibrate.Sample(
+        workload="w", kind="MultiFold", stream_bytes=1e6, steps=4,
+        measured_s=1e-3)])
+    plan = dse.explore(p, cache=cache)   # new profile hash -> new key
+    assert not plan.cached
+    assert dse.explore(p, cache=cache).cached   # re-tuned and re-cached
+
+
+def test_pattern_key_scoped_by_device_and_profile():
+    p = dse.filter_reduce_program(256)
+    base = dse.pattern_key(p, device="cpu", profile_hash="uncalibrated")
+    assert dse.pattern_key(p, device="tpu-v5e",
+                           profile_hash="uncalibrated") != base
+    assert dse.pattern_key(p, device="cpu", profile_hash="abc123") != base
+
+
+def test_repro_measure_env_opt_in(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_MEASURE", "top_k")
+    p = dse.filter_reduce_program(1024)
+    plan = dse.explore(p, cache=False,
+                       timing_db=str(tmp_path / "db.json"),
+                       top_k=1, warmup=1, repeat=1)
+    assert plan.measured
+    monkeypatch.setenv("REPRO_MEASURE", "bogus")
+    with pytest.raises(ValueError):
+        dse.explore(p, cache=False)
+
+
+# -------------------------------------------- hybrid explore_pipeline()
+@pytest.mark.slow
+def test_explore_pipeline_measured(tmp_path, monkeypatch):
+    from repro.core import codegen_pallas
+
+    pipe = dse.filter_fold_pipeline(1024)
+    kw = dict(cache=str(tmp_path / "cache.json"),
+              timing_db=str(tmp_path / "db.json"),
+              measure="top_k", top_k=2, warmup=1, repeat=1)
+    plan = dse.explore_pipeline(pipe, **kw)
+    assert plan.measured and plan.timed >= 1
+    assert plan.measured_seconds > 0
+    assert plan.fused
+
+    def boom(*a, **k):
+        raise AssertionError("second exploration must not lower")
+
+    monkeypatch.setattr(codegen_pallas, "lower_pipeline_for_timing", boom)
+    plan2 = dse.explore_pipeline(pipe, **kw)
+    assert plan2.cached and plan2.block == plan.block
+
+
+def test_measured_shortlist_records(tmp_path):
+    ts = dse.measured_shortlist(
+        dse.filter_reduce_program(1024), top_k=2,
+        timing_db=str(tmp_path / "db.json"), warmup=1, repeat=1)
+    assert 1 <= len(ts) <= 2
+    for t in ts:
+        assert t.analytic_seconds > 0
+        assert t.calibrated_seconds > 0
+        assert t.measurement.median_s > 0
+        assert t.steps >= 1
+        assert t.lowering in ("pallas", "oracle", "cached")
+
+
+def test_tile_plan_measured_fields_roundtrip(tmp_path):
+    plan = dse.TilePlan(sizes={"a": (8,)}, traffic_words=10,
+                        vmem_bytes=100, modeled_seconds=1e-6,
+                        measured=True, measured_seconds=2e-6, timed=3)
+    got = dse.TilePlan.from_json(json.loads(json.dumps(plan.to_json())))
+    assert got.measured and got.measured_seconds == 2e-6 and got.timed == 3
+
+
+def test_grid_steps():
+    p = dse.gemm_program(256, 128, 512)
+    assert dse.grid_steps(p, {"gemm": (128, 64), "gemm_k": (128,)}) \
+        == 2 * 2 * 4
+    assert dse.grid_steps(p, {"gemm": (256, 128), "gemm_k": (512,)}) == 1
