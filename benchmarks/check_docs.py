@@ -1,0 +1,131 @@
+"""Docs link checker: fail CI on broken relative links.
+
+Scans the repo's markdown documentation surface (``README.md`` and
+``docs/*.md`` by default) for inline links/images and verifies every
+*relative* target resolves to a real file or directory:
+
+* external schemes (http/https/mailto) are ignored;
+* pure in-page anchors (``#section``) are checked against the file's
+  own headings (GitHub anchor slugs);
+* ``path#fragment`` links check the path, and the fragment too when
+  the target is a markdown file this run parsed;
+* links that escape the repository root (e.g. the README's GitHub
+  ``../../actions/...`` badge route, which only exists server-side)
+  are reported as skipped, not failed.
+
+Exit status 0 when everything resolves, 1 with a per-link report
+otherwise -- the CI docs-check step runs exactly this module.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+# inline markdown links/images: [text](target) / ![alt](target);
+# targets with spaces-in-angle-brackets or titles keep only the path
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)>\s]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+SCHEME_RE = re.compile(r"^[a-zA-Z][a-zA-Z0-9+.-]*:")
+
+
+def anchor_slug(heading: str) -> str:
+    """GitHub's heading -> anchor rule: lowercase, strip everything but
+    word chars/spaces/hyphens, spaces to hyphens (inline code and link
+    markup dropped first)."""
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    text = text.replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text.lower(), flags=re.UNICODE)
+    return text.strip().replace(" ", "-")
+
+
+def markdown_files(repo_root: str, extra: list) -> list:
+    files = []
+    readme = os.path.join(repo_root, "README.md")
+    if os.path.exists(readme):
+        files.append(readme)
+    files += sorted(glob.glob(os.path.join(repo_root, "docs", "*.md")))
+    for pat in extra:
+        files += sorted(glob.glob(os.path.join(repo_root, pat)))
+    seen, out = set(), []
+    for f in files:
+        r = os.path.realpath(f)
+        if r not in seen:
+            seen.add(r)
+            out.append(f)
+    return out
+
+
+def check(repo_root: str, files: list):
+    """Returns (broken, skipped): lists of (file, link, reason)."""
+    anchors = {}  # realpath -> set of heading slugs
+    for f in files:
+        with open(f, encoding="utf-8") as fh:
+            body = CODE_FENCE_RE.sub("", fh.read())
+        anchors[os.path.realpath(f)] = {
+            anchor_slug(h) for h in HEADING_RE.findall(body)}
+
+    broken, skipped = [], []
+    root = os.path.realpath(repo_root)
+    for f in files:
+        with open(f, encoding="utf-8") as fh:
+            body = CODE_FENCE_RE.sub("", fh.read())
+        for target in LINK_RE.findall(body):
+            if SCHEME_RE.match(target):
+                continue  # http(s)/mailto/etc.
+            path, _, frag = target.partition("#")
+            if not path:  # in-page anchor
+                if frag and anchor_slug(frag) not in anchors.get(
+                        os.path.realpath(f), set()) \
+                        and frag not in anchors.get(
+                            os.path.realpath(f), set()):
+                    broken.append((f, target, "missing in-page anchor"))
+                continue
+            resolved = os.path.realpath(
+                os.path.join(os.path.dirname(f), path))
+            if not (resolved == root
+                    or resolved.startswith(root + os.sep)):
+                skipped.append((f, target, "escapes repo root"))
+                continue
+            if not os.path.exists(resolved):
+                broken.append((f, target, "missing file"))
+                continue
+            if frag and resolved in anchors \
+                    and anchor_slug(frag) not in anchors[resolved] \
+                    and frag not in anchors[resolved]:
+                broken.append((f, target, "missing anchor in target"))
+    return broken, skipped
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), ".."),
+        help="repository root (default: parent of benchmarks/)")
+    ap.add_argument("--glob", action="append", default=[],
+                    metavar="PATTERN",
+                    help="additional markdown globs relative to root "
+                         "(repeatable)")
+    args = ap.parse_args(argv)
+    root = os.path.realpath(args.root)
+
+    files = markdown_files(root, args.glob)
+    if not files:
+        print("check_docs: no markdown files found", file=sys.stderr)
+        return 1
+    broken, skipped = check(root, files)
+    for f, link, why in skipped:
+        print(f"SKIP  {os.path.relpath(f, root)}: ({link}) -- {why}")
+    for f, link, why in broken:
+        print(f"BROKEN {os.path.relpath(f, root)}: ({link}) -- {why}")
+    n_links = len(broken)
+    print(f"check_docs: {len(files)} files, {n_links} broken link(s)"
+          f", {len(skipped)} skipped")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,14 +16,18 @@ Prints ``name,us_per_call,derived`` CSV:
               dry-run results, if present.
   autotile/*  (--autotile) per-benchmark comparison of hand-picked vs
               DSE-tuned tile sizes: wall time of the lowered program and
-              the cost model's traffic/modeled-seconds accounting.
+              the cost model's traffic/modeled-seconds accounting, plus
+              a depth row (the searched metapipeline buffer depth and
+              the depth-2-vs-best modeled delta at the winning sizes).
   fused/*     pipeline fusion (tpchq6 / gda chains, the kmeans and
               gda_moments fan-out DAGs, the normalize Map-terminal
               pipeline): the single-megakernel lowering vs the
               per-pattern DAG -- interpret-mode wall time plus modeled
               HBM traffic (the intermediate round-trips fusion deletes;
-              paper Fig. 5/6).  These rows feed the CI perf-regression
-              gate (``benchmarks/check_regression.py``).
+              paper Fig. 5/6), and a depth row per pipeline (chosen
+              per-group buffer depths + depth-2-vs-best modeled delta).
+              These rows feed the CI perf-regression gate
+              (``benchmarks/check_regression.py``).
   measured/*  (--measure) hybrid analytic->measured DSE
               (``core.measure`` / ``core.calibrate``): for all five
               Pallas kernels' proxy programs and all five PIPELINES,
@@ -278,10 +282,30 @@ def roofline():
                  f";frac={a['roofline_fraction']:.3f}")
 
 
+def _depth_delta_row(section: str, p, plan) -> None:
+    """One row per workload: the depth the DSE chose and the modeled
+    depth-2-vs-best delta at the winning tile sizes (0% everywhere the
+    exposed-DMA-latency term is already saturated at depth 2)."""
+    from repro.core.dse import price
+
+    best = price(p, plan.sizes, depth=plan.depth)
+    d2 = price(p, plan.sizes, depth=2)
+    if best is None or d2 is None:  # depth-2 over budget: report why
+        emit(f"{section}/depth", 0,
+             f"chosen={plan.depth};depth2=over-vmem", depth=plan.depth)
+        return
+    delta = (d2.modeled_seconds - best.modeled_seconds) \
+        / max(d2.modeled_seconds, 1e-30)
+    emit(f"{section}/depth", 0,
+         f"chosen={plan.depth};model_d2_vs_best={delta * 100:+.1f}%",
+         depth=int(plan.depth), model_d2_vs_best=round(delta, 4))
+
+
 def autotile():
     """Tuned-vs-hand-picked tile sizes for every suite benchmark: wall
     time of the lowered program plus the cost model's accounting (the
-    quantity the DSE argmin optimizes)."""
+    quantity the DSE argmin optimizes), and the searched metapipeline
+    buffer depth with its depth-2-vs-best modeled delta."""
     from repro.core.dse import explore, price
 
     for name, builder in SUITE.items():
@@ -304,9 +328,50 @@ def autotile():
             us = _time(lambda: f(**inputs))
             emit(f"autotile/{name}/{label}", us,
                  f"traffic_words={words};sizes={dict(sizes)}")
+        _depth_delta_row(f"autotile/{name}", p, plan)
         ok = hand is None or plan.traffic_words <= hand.traffic_words
         emit(f"autotile/{name}/tuned_le_hand", 0,
              "PASS" if ok else "FAIL")
+
+
+def _pipeline_depth_row(section: str, pipe, plan) -> None:
+    """Chosen per-group buffer depths + the modeled depth-2-vs-best
+    delta, repricing the winning (groups, blocks) with every group
+    forced to depth 2 (uncalibrated pricing both ways, so the delta
+    isolates the exposed-DMA-latency term deeper buffering buys down).
+    """
+    from repro.core import dse
+    from repro.core import pipeline as plmod
+    from repro.core.cost import VMEM_BYTES
+
+    counters = {"explored": 0, "pruned": 0}
+
+    def total_seconds(depths):
+        s = 0.0
+        for (i0, i1), b, d in zip(plan.groups, plan.group_blocks,
+                                  depths):
+            pr = dse._price_pipeline_group(
+                plmod.sub_pipeline(pipe, i0, i1), b,
+                vmem_budget=VMEM_BYTES, profile=None,
+                counters=counters, depth=d)
+            if pr is None:
+                return None
+            s += pr[3]
+        return s
+
+    chosen = plan.depths or (2,) * len(plan.groups)
+    best_s = total_seconds(chosen)
+    d2_s = total_seconds((2,) * len(plan.groups))
+    if best_s is None or d2_s is None:
+        emit(f"{section}/depth", 0,
+             f"chosen={list(chosen)};depth2=over-vmem",
+             depths=list(map(int, chosen)))
+        return
+    delta = (d2_s - best_s) / max(d2_s, 1e-30)
+    emit(f"{section}/depth", 0,
+         f"chosen={list(chosen)};model_d2_vs_best={delta * 100:+.1f}%",
+         depths=list(map(int, chosen)),
+         model_d2_vs_best=round(delta, 4))
 
 
 def _check_outputs(pipe, got, ref):
@@ -330,7 +395,9 @@ def fused():
     Map terminal).  Reports interpret-mode wall time and the cost
     model's HBM traffic both ways; the traffic ratio is the fusion win
     the paper's Fig. 5/6 metapipelines bank on, and these rows are the
-    perf surface ``benchmarks/check_regression.py`` gates in CI."""
+    perf surface ``benchmarks/check_regression.py`` gates in CI.  Each
+    pipeline also reports its searched metapipeline buffer depths and
+    the depth-2-vs-best modeled delta at the winning blocks."""
     from repro.core.dse import explore_pipeline
     from repro.core.pipeline import lower_pipeline
 
@@ -352,6 +419,7 @@ def fused():
             emit(f"fused/{name}/{label}", us,
                  f"traffic_words={words};block={plan.block}",
                  traffic_words=int(words), block=int(plan.block))
+        _pipeline_depth_row(f"fused/{name}", pipe, plan)
         ratio = plan.traffic_ratio
         if ratio >= 1.5:
             wins += 1
@@ -397,7 +465,8 @@ def measured():
     repeat = TIMING["repeat"] or dse.MEASURE_REPEAT
     TIMING["used_min"] = min(TIMING["used_min"] or repeat, repeat)
     TIMING["used_max"] = max(TIMING["used_max"] or repeat, repeat)
-    # (row name, pattern kind, [(analytic_s, steps, measured_s, label)])
+    # (row name, pattern kind, [(analytic_s, steps, measured_s, label)],
+    #  extra json fields)
     tables = []
 
     for name, p in _kernel_proxy_programs().items():
@@ -406,22 +475,36 @@ def measured():
         tables.append((f"kernel/{name}", type(p).__name__,
                        [(t.analytic_seconds, t.steps,
                          t.measurement.median_s, str(dict(t.sizes)))
-                        for t in ts]))
+                        for t in ts], {}))
     for name, builder in PIPELINES.items():
         pipe, _, _ = builder()
         ts = dse.measured_pipeline_shortlist(pipe, top_k=top_k,
                                              warmup=warmup, repeat=repeat)
+        # measured depth-2-vs-best: the timed (block, depth) variants
+        # execute depth-deep rotating scratch, so when both the winner
+        # and a depth-2 variant were timed the delta is real, not
+        # modeled
+        extra = {}
+        if ts:
+            best_t = min(ts, key=lambda t: t.measurement.median_s)
+            d2 = [t for t in ts if t.depth == 2]
+            if d2 and best_t.depth != 2:
+                d2_s = min(t.measurement.median_s for t in d2)
+                extra["measured_d2_vs_best"] = round(
+                    (d2_s - best_t.measurement.median_s)
+                    / max(d2_s, 1e-30), 4)
         tables.append((f"pipeline/{name}", "Pipeline",
                        [(t.analytic_seconds, t.steps,
-                         t.measurement.median_s, f"block={t.block}")
-                        for t in ts]))
+                         t.measurement.median_s,
+                         f"block={t.block},depth={t.depth}")
+                        for t in ts], extra))
 
     # rank correlations against the FINAL profile (fitted on exactly
     # these samples): its rank guard makes the calibrated mean >= the
     # analytic mean in-sample, the property the gate row asserts
     prof = calibrate.load_profile()
     rhos_a, rhos_c = [], []
-    for name, kind, rows in tables:
+    for name, kind, rows, extra in tables:
         if not rows:
             emit(f"measured/{name}", 0, "no-candidates-timed")
             continue
@@ -435,11 +518,15 @@ def measured():
         rhos_a.append(rho_a)
         rhos_c.append(rho_c)
         best = min(range(len(rows)), key=lambda i: rows[i][2])
-        emit(f"measured/{name}", rows[best][2] * 1e6,
-             f"rho_analytic={rho_a:+.2f};rho_calibrated={rho_c:+.2f};"
-             f"timed={len(rows)};best={rows[best][3]}",
+        derived = (f"rho_analytic={rho_a:+.2f};"
+                   f"rho_calibrated={rho_c:+.2f};"
+                   f"timed={len(rows)};best={rows[best][3]}")
+        if "measured_d2_vs_best" in extra:
+            derived += (";measured_d2_vs_best="
+                        f"{extra['measured_d2_vs_best'] * 100:+.1f}%")
+        emit(f"measured/{name}", rows[best][2] * 1e6, derived,
              rho_analytic=round(rho_a, 3), rho_calibrated=round(rho_c, 3),
-             timed=len(rows))
+             timed=len(rows), **extra)
 
     if prof is not None:
         emit("measured/calibration_profile", 0,

@@ -561,7 +561,7 @@ def _padded_out(range_shape: Tuple[int, ...]) -> Tuple[int, ...]:
     return (1, 1)
 
 
-def lower_fused_dag(terminals, grid_n: int) -> Callable:
+def lower_fused_dag(terminals, grid_n: int, depth: int = 2) -> Callable:
     """ONE Pallas kernel for a fused pipeline DAG.
 
     ``terminals`` is a sequence of ``(output name, fused pattern)``
@@ -569,15 +569,20 @@ def lower_fused_dag(terminals, grid_n: int) -> Callable:
     ``grid_n``.  External tensors stream through double-buffered
     BlockSpecs (one operand per distinct tile, however many terminal
     trees read it); every producer stage runs once per grid step into
-    its VMEM scratch and is consumed in place by all its readers
-    (fan-out pays a single stage execution and a single buffer); each
-    terminal then updates its own output block -- revisited accumulator
-    / CAM blocks for folds, a streamed write-once block for Map
-    terminals.  HBM is touched solely at the pipeline edges (paper
-    Fig. 6).  Returns ``call(**tensors) -> {name: array}``.
+    its rotating ``depth``-deep VMEM scratch -- slot ``g % depth``, so
+    ``depth - 1`` earlier stage tiles stay live behind the one being
+    written, realizing the metapipeline buffer depth ``plan_memory``
+    charges -- and is consumed in place by all its readers (fan-out
+    pays a single stage execution and a single buffer); each terminal
+    then updates its own output block -- revisited accumulator / CAM
+    blocks for folds, a streamed write-once block for Map terminals.
+    HBM is touched solely at the pipeline edges (paper Fig. 6).
+    Returns ``call(**tensors) -> {name: array}``.
     """
     from jax.experimental.pallas import tpu as pltpu
 
+    if depth < 2:
+        raise ValueError(f"metapipeline depth must be >= 2, got {depth}")
     terminals = tuple(terminals)
     for _, t in terminals:
         if not (t.strided and len(t.domain) == 1 and t.inner is not None):
@@ -595,7 +600,8 @@ def lower_fused_dag(terminals, grid_n: int) -> Callable:
                      _block_index_map(tc.index_map, tc.tile_shape, 1))
         for tc in reps
     ]
-    scratch_shapes = [pltpu.VMEM(tc.tile_shape, jnp.dtype(tc.dtype))
+    scratch_shapes = [pltpu.VMEM((depth,) + tuple(tc.tile_shape),
+                                 jnp.dtype(tc.dtype))
                       for tc in stage_loads]
     stage_fns = [_stage_tile_fn(tc.src) for tc in stage_loads]
 
@@ -616,13 +622,17 @@ def lower_fused_dag(terminals, grid_n: int) -> Callable:
             val = r[...]
             for uid in uids:  # every tree's alias of this tile
                 env[uid] = val
+        slot = g % depth
         for tc, fn, sc in zip(stage_loads, stage_fns, scratch):
-            sc[...] = fn((g,), env).astype(sc.dtype)
+            sc[pl.ds(slot, 1)] = fn((g,), env).astype(sc.dtype)[None]
             # consumers read the scratch ref, not the producing SSA
             # value: the scratch IS the stage's on-chip buffer (it is
             # what plan_memory charges and what the docs promise), so
-            # it must not be a dead write-only allocation
-            env[tc.uid] = sc[...]
+            # it must not be a dead write-only allocation; the slot
+            # rotates through the depth copies so successive grid
+            # steps never overwrite a tile a deeper pipeline stage
+            # could still be draining (WAR avoidance)
+            env[tc.uid] = sc[pl.ds(slot, 1)][0]
         for (_, _, _, emit), out in zip(emitters, outs):
             emit(g, out, env)
 
@@ -643,13 +653,13 @@ def lower_fused_dag(terminals, grid_n: int) -> Callable:
     return call
 
 
-def lower_fused_chain(p: ir.Pattern) -> Callable:
+def lower_fused_chain(p: ir.Pattern, depth: int = 2) -> Callable:
     """Single-terminal front-end over ``lower_fused_dag`` (the PR-2
     chain API): one fused pattern in, the bare output array out."""
     if not (p.strided and len(p.domain) == 1):
         raise NotImplementedError("fused chain: 1-D strided root expected")
     (grid_n,) = p.domain
-    dag_call = lower_fused_dag(((p.name, p),), grid_n)
+    dag_call = lower_fused_dag(((p.name, p),), grid_n, depth=depth)
 
     def call(**tensors):
         return dag_call(**tensors)[p.name]
@@ -665,8 +675,10 @@ def lower_fused_pipeline(pipe, *, plan=None,
     ``PipelinePlan``.
 
     Each plan group lowers as one multi-output megakernel
-    (``lower_fused_dag``) at its own block size (``plan.group_blocks``);
-    group boundaries -- present only on the split-fallback path when no
+    (``lower_fused_dag``) at its own block size (``plan.group_blocks``)
+    and metapipeline buffer depth (``plan.depths``: the stage scratch
+    rotates that many VMEM copies); group boundaries -- present only
+    on the split-fallback path when no
     fully fused candidate fits VMEM -- materialize their cut
     intermediates and chain through them.  The selected plan is exposed
     on the returned callable as ``.pipeline_plan``, and
@@ -684,14 +696,16 @@ def lower_fused_pipeline(pipe, *, plan=None,
         plan = explore_pipeline(pipe, vmem_budget=budget, cache=cache,
                                 measure=measure)
 
+    group_depths = plan.depths or (2,) * len(plan.groups)
     runners = []
     lowerings = []
-    for (i0, i1), b in zip(plan.groups, plan.group_blocks):
+    for (i0, i1), b, d in zip(plan.groups, plan.group_blocks,
+                              group_depths):
         sub = plmod.sub_pipeline(pipe, i0, i1)
         outs = plmod.output_names(sub)
         try:
             fdag = plmod.fuse_dag(sub, b, vmem_budget_words=budget // 4)
-            runner = lower_fused_dag(fdag.terminals, fdag.grid)
+            runner = lower_fused_dag(fdag.terminals, fdag.grid, depth=d)
             how = "megakernel"
         except NotImplementedError:
             runner = plmod.unfused_runner(sub)  # correctness first
@@ -788,8 +802,9 @@ def lower_pipeline_for_timing(pipe, plan, *,
                               seed: int = 0) -> Callable[[], Any]:
     """Lower one fused-pipeline plan candidate into a zero-arg callable
     over synthesized inputs, for the timing harness.  The plan is taken
-    as-is (no DSE re-entry), so each shortlisted block size times
-    exactly the megakernel it would ship as."""
+    as-is (no DSE re-entry), so each shortlisted (block, depth) variant
+    times exactly the megakernel it would ship as -- ``plan.depths``
+    sizes the rotating stage scratch via ``lower_fused_pipeline``."""
     from . import pipeline as plmod
     from .measure import synth_inputs
 
@@ -807,7 +822,12 @@ def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
     cache); pass an explicit ``TilePlan`` to reuse a prior exploration,
     or ``measure="top_k"`` to let hybrid DSE back the plan with real
     timings.  The selected plan is exposed on the returned callable as
-    ``.tile_plan``.
+    ``.tile_plan``, including the searched metapipeline buffer depth
+    (``plan.depths``).  Single-pattern templates delegate buffering to
+    the Pallas/Mosaic grid pipeliner, so the depth shapes the *pricing*
+    (VMEM charge + exposed-latency model) rather than the emitted
+    kernel; fused pipelines (``lower_fused_pipeline``) realize it as
+    rotating stage scratch.
     """
     from .cost import VMEM_BYTES
     from .dse import explore

@@ -27,6 +27,14 @@ HBM_BYTES_PER_S = 819e9
 PEAK_FLOPS = 197e12
 VMEM_BYTES = 16 * 2 ** 20
 
+# Fixed per-grid-step DMA cost (issue + flight latency) that bandwidth
+# accounting misses: a tile's transfer can start at most ``depth - 1``
+# outer iterations ahead of its consumer, so a metapipeline with
+# buffer depth d hides up to ``(d - 1) x max_stage_seconds`` of it.
+# What is left is the *exposed* latency ``metapipeline_time`` charges
+# per steady-state step -- the quantity deeper buffering buys down.
+DMA_ISSUE_LATENCY_S = 1e-6
+
 
 @dataclasses.dataclass
 class TrafficReport:
@@ -133,15 +141,32 @@ class StageCost:
 
 
 def metapipeline_time(stage_costs: List[StageCost],
-                      outer_trips: int) -> Tuple[float, float]:
+                      outer_trips: int, depth: int = 2,
+                      dma_latency_s: float = DMA_ISSUE_LATENCY_S
+                      ) -> Tuple[float, float]:
     """(sequential, metapipelined) execution time for an outer loop whose
-    body is the given stages.  Sequential = sum per iteration; the
-    metapipeline overlaps stages across outer iterations (double
-    buffers), so steady-state cost = max stage (plus pipeline fill)."""
+    body is the given stages.
+
+    Sequential = sum per iteration; the metapipeline overlaps stages
+    across outer iterations (buffers of depth >= 2), so steady-state
+    cost = max stage (plus pipeline fill) plus the *exposed* DMA issue
+    latency.  A buffer of depth ``d`` lets a load's DMA be issued up to
+    ``d - 1`` iterations ahead, giving it ``(d - 1) x max_stage``
+    seconds to land before its consumer needs it; whatever remains of
+    ``dma_latency_s`` is charged once per steady-state step (issue
+    latencies of concurrent loads overlap each other).  The term
+    saturates at zero, so deepening past the point where latency is
+    fully hidden buys nothing -- that is what keeps the DSE's optimum
+    depth workload-dependent instead of "deeper is always better".
+    """
     per_iter = [s.seconds for s in stage_costs]
     seq = outer_trips * sum(per_iter)
-    fill = sum(per_iter) - max(per_iter)
-    pipe = fill + outer_trips * max(per_iter)
+    step = max(per_iter)
+    exposed = 0.0
+    if any(s.kind == "load" for s in stage_costs):
+        exposed = max(0.0, dma_latency_s - (max(depth, 1) - 1) * step)
+    fill = sum(per_iter) - step
+    pipe = fill + outer_trips * (step + exposed)
     return seq, pipe
 
 

@@ -83,10 +83,21 @@ MAX_POINTS = 4096
 # Cost/memory-model revision, folded into every tuning-cache key: plans
 # priced under older model semantics (e.g. the pre-PR-2 single-buffer
 # accounting for strided loads, the PR-2 chain-only pipeline pricing
-# superseded by the DAG accounting, or the pre-calibration pricing that
-# ignored device identity and launch overhead) must not be replayed as
-# cache hits.  CI keys its persistent REPRO_DSE_CACHE on this string too.
-MODEL_VERSION = 4
+# superseded by the DAG accounting, the pre-calibration pricing that
+# ignored device identity and launch overhead, or the v4 fixed-depth-2
+# pricing that predates the searched metapipeline buffer depth) must
+# not be replayed as cache hits.  CI keys its persistent
+# REPRO_DSE_CACHE on this string too.
+MODEL_VERSION = 5
+
+# Metapipeline buffer depths enumerated per candidate (2 = the classic
+# double buffer, the minimum that overlaps producer and consumer
+# stages; deeper rotating buffers hide more DMA issue latency but
+# charge ``depth x`` VMEM, so they compete with bigger tiles under the
+# budget).  The exposed-latency term saturates (cost.metapipeline_time),
+# so the optimum is workload-dependent: big tiles hide the latency at
+# depth 2 already, small streaming tiles want 3-4.
+DEPTHS = (2, 3, 4)
 
 # hybrid-mode defaults: how many analytically shortlisted candidates
 # are actually lowered and timed, and the measurement shape
@@ -125,7 +136,13 @@ def _resolve_profile(profile):
 
 @dataclasses.dataclass(frozen=True)
 class TilePlan:
-    """DSE result: per-pattern tile sizes plus the model's accounting."""
+    """DSE result: per-pattern tile sizes plus the model's accounting.
+
+    ``depths`` maps each tiled pattern name to the metapipeline buffer
+    depth the search selected for its stage-crossing buffers (one
+    searched depth per plan, recorded per pattern so downstream
+    consumers key it like ``sizes``); ``depth`` is the scalar view.
+    """
 
     sizes: Dict[str, Tuple[int, ...]]
     traffic_words: int
@@ -138,10 +155,17 @@ class TilePlan:
     measured: bool = False   # winner backed by a real on-device timing
     measured_seconds: float = 0.0   # winner's median wall time
     timed: int = 0           # candidates actually lowered and timed
+    depths: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def depth(self) -> int:
+        """The plan's stage-buffer depth (2 when unrecorded)."""
+        return next(iter(self.depths.values()), 2)
 
     def to_json(self) -> Dict:
         return {
             "sizes": {k: list(v) for k, v in self.sizes.items()},
+            "depths": {k: int(v) for k, v in self.depths.items()},
             "traffic_words": int(self.traffic_words),
             "vmem_bytes": int(self.vmem_bytes),
             "modeled_seconds": float(self.modeled_seconds),
@@ -156,6 +180,8 @@ class TilePlan:
     @classmethod
     def from_json(cls, d: Dict) -> "TilePlan":
         return cls(sizes={k: tuple(v) for k, v in d["sizes"].items()},
+                   depths={k: int(v)
+                           for k, v in d.get("depths", {}).items()},
                    traffic_words=int(d["traffic_words"]),
                    vmem_bytes=int(d["vmem_bytes"]),
                    modeled_seconds=float(d["modeled_seconds"]),
@@ -397,6 +423,7 @@ class Priced:
     modeled_seconds: float           # uncalibrated analytic prediction
     calibrated_seconds: float = -1.0  # profile-adjusted (== analytic
     steps: int = 1                    # when uncalibrated); grid steps
+    depth: int = 2                    # metapipeline buffer depth
 
     def __post_init__(self):
         if self.calibrated_seconds < 0:
@@ -431,20 +458,26 @@ def _tile_ir(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]],
 def price(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
           vmem_budget: int = VMEM_BYTES,
           bytes_per_word: int = 4,
-          profile=False) -> Optional[Priced]:
+          profile=False,
+          depth: int = 2) -> Optional[Priced]:
     """Tile ``p`` with ``sizes`` and price it; None if it busts VMEM.
 
     Modeled seconds = HBM stream time of the tiled IR's main-memory
-    reads, divided by the metapipeline overlap factor of its schedule
-    (``metapipeline_time`` steady state vs. sequential).  With a
-    calibration profile (``profile``: None -> the device's persisted
-    one, False -> uncalibrated), ``calibrated_seconds`` reprices the
-    same overlapped stream at the *measured* effective bandwidth plus
-    the per-pattern launch overhead per grid step.
+    reads, scaled by the metapipeline time ratio of its schedule
+    (``metapipeline_time`` steady state vs. sequential).  ``depth`` is
+    the stage-buffer depth the schedule and VMEM plan are built with:
+    the plan charges ``depth x`` bytes per stage-crossing buffer (so a
+    deep candidate can bust VMEM where the shallow one fits) and the
+    time model charges whatever DMA issue latency ``depth - 1``
+    iterations of lookahead cannot hide.  With a calibration profile
+    (``profile``: None -> the device's persisted one, False ->
+    uncalibrated), ``calibrated_seconds`` reprices the same overlapped
+    stream at the *measured* effective bandwidth plus the per-pattern
+    launch overhead per grid step.
     """
     prof = _resolve_profile(profile)
     t = _tile_ir(p, sizes, vmem_budget // bytes_per_word)
-    plan = plan_memory(t, vmem_budget_bytes=vmem_budget)
+    plan = plan_memory(t, vmem_budget_bytes=vmem_budget, depth=depth)
     if not plan.fits:
         return None
     # an affine tensor read left in place means its tile copy would not
@@ -455,28 +488,34 @@ def price(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
                 return None
     tr = traffic(t)
     seconds = stream_seconds(tr.total_reads, bytes_per_word=bytes_per_word)
-    mp = build_schedule(t, vmem_budget // bytes_per_word)
+    mp = build_schedule(t, vmem_budget // bytes_per_word, depth=depth)
     if mp is not None:
         body_words = sum(s.words for s in mp.stages if s.kind == "body")
-        _, _, overlap = model_speedup(mp, flops_per_body=body_words * 100.0)
-        seconds /= max(overlap, 1.0)
+        seq, pipe, _ = model_speedup(mp, flops_per_body=body_words * 100.0)
+        if seq > 0 and pipe > 0:
+            # pipe/seq < 1 is the overlap speedup; > 1 means exposed
+            # DMA latency dominates the shallow pipeline -- both priced
+            seconds *= pipe / seq
     steps = grid_steps(p, sizes)
     calibrated = calibrate.predicted_seconds(
         type(p).__name__, seconds * HBM_BYTES_PER_S, steps, profile=prof)
     return Priced(dict(sizes), tr.total_reads, plan.total_bytes, seconds,
-                  calibrated, steps)
+                  calibrated, steps, depth=depth)
 
 
 def _better(a: Priced, b: Optional[Priced]) -> bool:
     """Lexicographic: traffic, then (calibrated) modeled time, then
-    prefer reuse."""
+    shallowest depth, then prefer reuse."""
     if b is None:
         return True
     return _rank_key(a) < _rank_key(b)
 
 
 def _rank_key(a: Priced) -> Tuple:
-    return (a.traffic_words, a.calibrated_seconds, -a.vmem_bytes)
+    # depth breaks seconds ties BEFORE the -vmem reuse term: once the
+    # exposed-latency term saturates, deeper variants tie on seconds
+    # and their larger footprint must not win via the reuse preference
+    return (a.traffic_words, a.calibrated_seconds, a.depth, -a.vmem_bytes)
 
 
 # --------------------------------------------------------------------------
@@ -489,14 +528,18 @@ def shortlist(p: ir.Pattern, *,
               align: int = MXU,
               space: Optional[Dict[str, List[Tuple[int, ...]]]] = None,
               max_points: int = MAX_POINTS,
-              profile=False
+              profile=False,
+              depths: Tuple[int, ...] = DEPTHS
               ) -> Tuple[List[Priced], bool, int, int]:
     """Analytic enumeration + VMEM pruning, every feasible candidate
     priced and sorted best-first by the lexicographic objective.
 
-    Returns ``(candidates, thinned, explored, pruned)``; the plain
-    analytic argmin is ``candidates[0]``, the hybrid mode lowers and
-    times ``candidates[:top_k]``.
+    The candidate space is the cross product of tile sizes x ``depths``
+    (metapipeline buffer depths): a deep variant of a tile that would
+    bust VMEM is pruned exactly like an oversized tile.  Returns
+    ``(candidates, thinned, explored, pruned)``; the plain analytic
+    argmin is ``candidates[0]``, the hybrid mode lowers and times
+    ``candidates[:top_k]``.
     """
     prof = _resolve_profile(profile)
     if space is None:
@@ -508,13 +551,15 @@ def shortlist(p: ir.Pattern, *,
     explored = pruned = 0
     for combo in itertools.product(*(space[n] for n in names)):
         sizes = dict(zip(names, combo))
-        priced = price(p, sizes, vmem_budget=vmem_budget,
-                       profile=prof if prof is not None else False)
-        explored += 1
-        if priced is None:
-            pruned += 1
-            continue
-        cands.append(priced)
+        for d in depths:
+            priced = price(p, sizes, vmem_budget=vmem_budget,
+                           profile=prof if prof is not None else False,
+                           depth=d)
+            explored += 1
+            if priced is None:
+                pruned += 1
+                continue
+            cands.append(priced)
     cands.sort(key=_rank_key)
     return cands, thinned, explored, pruned
 
@@ -531,12 +576,33 @@ class CandidateTiming:
     steps: int
     measurement: measure_mod.Measurement
     lowering: str                # "pallas" | "oracle" | "cached"
+    depth: int = 2               # metapipeline buffer depth
 
 
 def _workload_tag(p: ir.Pattern) -> str:
     shapes = "+".join(f"{t.name}:{'x'.join(map(str, t.shape))}"
                       for t in ir.inputs_of(p))
     return f"{type(p).__name__}:{p.name}:{shapes}"
+
+
+def _top_distinct_sizes(cands: List[Priced], k: int) -> List[Priced]:
+    """Best-first prefix of ``cands`` with at most one entry per tile
+    assignment.  Depth variants of one tile execute identically under
+    the single-pattern templates (the Mosaic pipeliner owns the
+    BlockSpec buffering), so timing them separately would spend the
+    whole top-k on copies of a single measurement; keeping the best-
+    ranked depth per sizes times ``k`` genuinely distinct kernels."""
+    out: List[Priced] = []
+    seen = set()
+    for c in cands:
+        sig = tuple(sorted((n, tuple(v)) for n, v in c.sizes.items()))
+        if sig in seen:
+            continue
+        seen.add(sig)
+        out.append(c)
+        if len(out) >= k:
+            break
+    return out
 
 
 def _time_candidates(p: ir.Pattern, top: List[Priced], *,
@@ -553,7 +619,10 @@ def _time_candidates(p: ir.Pattern, top: List[Priced], *,
         sizes_sig = tuple(sorted((k, tuple(v))
                                  for k, v in cand.sizes.items()))
         # identifies the computation, not its pricing: no device /
-        # profile-hash component (TimingDB adds the device itself)
+        # profile-hash component (TimingDB adds the device itself).
+        # Depth is deliberately absent: single-pattern lowerings
+        # delegate buffering to the Pallas pipeliner, so every depth
+        # variant of one tile assignment is the same executable.
         key = pattern_key(p, vmem_budget=vmem_budget, align=align,
                           extra=("timing", sizes_sig),
                           device="", profile_hash="")
@@ -574,7 +643,8 @@ def _time_candidates(p: ir.Pattern, top: List[Priced], *,
             vmem_bytes=cand.vmem_bytes,
             analytic_seconds=cand.modeled_seconds,
             calibrated_seconds=cand.calibrated_seconds,
-            steps=cand.steps, measurement=m, lowering=how[0]))
+            steps=cand.steps, measurement=m, lowering=how[0],
+            depth=cand.depth))
     return out
 
 
@@ -611,7 +681,8 @@ def measured_shortlist(p: ir.Pattern, *,
     cands, _, _, _ = shortlist(p, vmem_budget=vmem_budget, align=align,
                                space=space, max_points=max_points,
                                profile=profile)
-    timings = _time_candidates(p, cands[:max(top_k, 1)],
+    timings = _time_candidates(p, _top_distinct_sizes(cands,
+                                                      max(top_k, 1)),
                                vmem_budget=vmem_budget, align=align,
                                timing_db=timing_db, warmup=warmup,
                                repeat=repeat)
@@ -631,18 +702,29 @@ def explore(p: ir.Pattern, *,
             timing_db=None,
             profile=None,
             warmup: int = MEASURE_WARMUP,
-            repeat: int = MEASURE_REPEAT) -> TilePlan:
-    """Design-space exploration over tile sizes for any pattern program.
+            repeat: int = MEASURE_REPEAT,
+            depths: Tuple[int, ...] = DEPTHS) -> TilePlan:
+    """Design-space exploration over tile sizes AND metapipeline buffer
+    depths for any pattern program.
 
     ``p`` is the *untiled* program.  ``cache`` selects the tuning cache:
     ``None`` -> the default on-disk cache, a path or ``TuningCache`` ->
-    that cache, ``False`` -> no caching.  Raises ``ValueError`` when no
-    candidate fits the VMEM budget.
+    that cache, ``False`` -> no caching.  ``depths`` is the set of
+    stage-buffer depths enumerated per tile candidate (default
+    ``DEPTHS = (2, 3, 4)``): each (sizes, depth) pair is priced with
+    ``depth x`` VMEM charged per stage-crossing buffer and the exposed
+    DMA latency the depth cannot hide; ties in modeled seconds break
+    toward the shallowest depth.  The winner's depth is recorded on
+    ``TilePlan.depths``.  Raises ``ValueError`` when no candidate fits
+    the VMEM budget.
 
     ``measure="top_k"`` (or ``REPRO_MEASURE=top_k``) switches to hybrid
     analytic->measured mode: the analytic shortlist's top ``top_k``
-    candidates are lowered (``codegen_pallas.lower_for_timing``) and
-    timed (median-of-``repeat``, ``warmup`` excluded, memoized in the
+    candidates (distinct tile assignments; depth variants of one tile
+    share a measurement because the single-pattern templates delegate
+    buffering to the Pallas pipeliner) are lowered
+    (``codegen_pallas.lower_for_timing``) and timed
+    (median-of-``repeat``, ``warmup`` excluded, memoized in the
     device-keyed ``timing_db``), the measured argmin wins, and the
     samples recalibrate the device profile before the plan is cached --
     so a second call is a pure cache hit: zero lowering, zero execution.
@@ -657,10 +739,11 @@ def explore(p: ir.Pattern, *,
 
     # the key covers the *resolved* candidate space: a caller-restricted
     # or thinned exploration must not share cache entries with a full
-    # one, nor a measured exploration with a purely analytic one
+    # one, nor a measured exploration with a purely analytic one, nor
+    # a depth-restricted exploration with the default-depths one
     space_sig = tuple((n, tuple(space[n])) for n in names)
-    extra = space_sig + ((("measure", measure, int(top_k)),)
-                         if measure else ())
+    extra = space_sig + (("depths",) + tuple(int(d) for d in depths),) \
+        + ((("measure", measure, int(top_k)),) if measure else ())
 
     def key_now() -> str:
         return pattern_key(p, vmem_budget=vmem_budget, align=align,
@@ -675,7 +758,7 @@ def explore(p: ir.Pattern, *,
     # already-thinned space is a no-op and would report False)
     cands, _, explored, pruned = shortlist(
         p, vmem_budget=vmem_budget, align=align, space=space,
-        max_points=max_points, profile=profile)
+        max_points=max_points, profile=profile, depths=depths)
     if not cands:
         raise ValueError(
             f"DSE: no tile candidate fits VMEM budget {vmem_budget} B "
@@ -685,7 +768,8 @@ def explore(p: ir.Pattern, *,
     timed_n = 0
     best = cands[0]
     if measure == "top_k":
-        timings = _time_candidates(p, cands[:max(top_k, 1)],
+        timings = _time_candidates(p, _top_distinct_sizes(cands,
+                                                          max(top_k, 1)),
                                    vmem_budget=vmem_budget, align=align,
                                    timing_db=timing_db, warmup=warmup,
                                    repeat=repeat)
@@ -693,14 +777,16 @@ def explore(p: ir.Pattern, *,
         if timings:
             win = min(timings,
                       key=lambda t: (t.measurement.median_s,
-                                     t.traffic_words, -t.vmem_bytes))
+                                     t.traffic_words, t.depth,
+                                     -t.vmem_bytes))
             best = Priced(win.sizes, win.traffic_words, win.vmem_bytes,
                           win.analytic_seconds, win.calibrated_seconds,
-                          win.steps)
+                          win.steps, depth=win.depth)
             measured_s = win.measurement.median_s
             timed_n = len(timings)
 
     plan = TilePlan(sizes={k: tuple(v) for k, v in best.sizes.items()},
+                    depths={k: int(best.depth) for k in best.sizes},
                     traffic_words=best.traffic_words,
                     vmem_bytes=best.vmem_bytes,
                     modeled_seconds=best.calibrated_seconds,
@@ -733,6 +819,13 @@ class PipelinePlan:
     group carries its own streaming tile in ``group_blocks`` (the split
     paths need not share a block size).  ``block`` is the first group's
     tile -- for a fused plan, the tile of the whole megakernel.
+
+    ``depths`` (parallel to ``group_blocks``) records each group's
+    searched metapipeline buffer depth: the stage scratch and input
+    blocks of that group's megakernel rotate ``depth`` copies
+    (``codegen_pallas.lower_fused_dag``), priced against the latency
+    they hide (``cost.metapipeline_time``).  ``depth`` is the first
+    group's value.
     """
 
     block: int
@@ -748,11 +841,20 @@ class PipelinePlan:
     measured: bool = False          # winner backed by a real timing
     measured_seconds: float = 0.0   # winner's median wall time
     timed: int = 0                  # candidates lowered and timed
+    depths: Tuple[int, ...] = ()    # per-group stage-buffer depth
 
     def __post_init__(self):
         if not self.group_blocks:
             object.__setattr__(self, "group_blocks",
                                (self.block,) * len(self.groups))
+        if not self.depths:
+            object.__setattr__(self, "depths", (2,) * len(self.groups))
+
+    @property
+    def depth(self) -> int:
+        """The first group's stage-buffer depth (the whole megakernel's
+        depth for a fused plan)."""
+        return self.depths[0] if self.depths else 2
 
     @property
     def fused(self) -> bool:
@@ -768,6 +870,7 @@ class PipelinePlan:
             "block": int(self.block),
             "groups": [list(g) for g in self.groups],
             "group_blocks": [int(b) for b in self.group_blocks],
+            "depths": [int(d) for d in self.depths],
             "traffic_words": int(self.traffic_words),
             "unfused_traffic_words": int(self.unfused_traffic_words),
             "vmem_bytes": int(self.vmem_bytes),
@@ -785,6 +888,7 @@ class PipelinePlan:
                    groups=tuple(tuple(g) for g in d["groups"]),
                    group_blocks=tuple(int(b)
                                       for b in d.get("group_blocks", ())),
+                   depths=tuple(int(x) for x in d.get("depths", ())),
                    traffic_words=int(d["traffic_words"]),
                    unfused_traffic_words=int(d["unfused_traffic_words"]),
                    vmem_bytes=int(d["vmem_bytes"]),
@@ -840,10 +944,11 @@ def _pipeline_candidates(pipe, align: int, max_points: int) -> List[int]:
 
 
 def _price_pipeline_group(sub_pipe, b: int, *, vmem_budget: int,
-                          profile, counters: Dict[str, int]):
-    """Price the sub-pipeline fused at tile ``b``: returns
-    ``(hbm_words, vmem_bytes, analytic_s, calibrated_s, steps)`` or
-    None when it busts VMEM / cannot fuse."""
+                          profile, counters: Dict[str, int],
+                          depth: int = 2):
+    """Price the sub-pipeline fused at tile ``b`` with stage-buffer
+    ``depth``: returns ``(hbm_words, vmem_bytes, analytic_s,
+    calibrated_s, steps)`` or None when it busts VMEM / cannot fuse."""
     from . import pipeline as plmod  # local import: keep layering thin
 
     budget_words = max(vmem_budget // 4, 1)
@@ -852,7 +957,8 @@ def _price_pipeline_group(sub_pipe, b: int, *, vmem_budget: int,
     except (ValueError, NotImplementedError):
         return None
     counters["explored"] += 1
-    mem = plan_memory(fdag.patterns, vmem_budget_bytes=vmem_budget)
+    mem = plan_memory(fdag.patterns, vmem_budget_bytes=vmem_budget,
+                      depth=depth)
     if not mem.fits:
         counters["pruned"] += 1
         return None
@@ -865,18 +971,20 @@ def _price_pipeline_group(sub_pipe, b: int, *, vmem_budget: int,
     reads = sum(plmod.dag_external_reads(fdag).values())
     out_w = plmod.output_words(sub_pipe)
     seconds = stream_seconds(reads + out_w)
-    # overlap: most conservative terminal schedule of the kernel
-    overlaps = []
+    # time ratio: most conservative terminal schedule of the kernel
+    # (pipe/seq < 1 is overlap speedup, > 1 exposed-latency slowdown)
+    ratios = []
     for t in fdag.patterns:
-        mp = build_schedule(t, budget_words)
+        mp = build_schedule(t, budget_words, depth=depth)
         if mp is not None:
             body_words = sum(s.words for s in mp.stages
                              if s.kind in ("body", "compute"))
-            _, _, ov = model_speedup(
+            seq, pipe, _ = model_speedup(
                 mp, flops_per_body=body_words * 100.0)
-            overlaps.append(ov)
-    if overlaps:
-        seconds /= max(min(overlaps), 1.0)
+            if seq > 0 and pipe > 0:
+                ratios.append(pipe / seq)
+    if ratios:
+        seconds *= max(ratios)
     steps = int(fdag.grid)
     calibrated = calibrate.predicted_seconds(
         "Pipeline", seconds * HBM_BYTES_PER_S, steps, profile=profile)
@@ -885,7 +993,7 @@ def _price_pipeline_group(sub_pipe, b: int, *, vmem_budget: int,
 
 @dataclasses.dataclass(frozen=True)
 class PipelineTiming:
-    """One shortlisted fused-pipeline block candidate, lowered + timed."""
+    """One shortlisted fused-pipeline candidate, lowered + timed."""
 
     block: int
     traffic_words: int
@@ -895,6 +1003,7 @@ class PipelineTiming:
     steps: int
     measurement: measure_mod.Measurement
     plan: "PipelinePlan"
+    depth: int = 2               # stage-buffer depth of the megakernel
 
 
 def _time_pipeline_candidates(pipe, priced: List[Tuple], *,
@@ -902,21 +1011,25 @@ def _time_pipeline_candidates(pipe, priced: List[Tuple], *,
                               timing_db, warmup: int, repeat: int
                               ) -> List[PipelineTiming]:
     """Lower + time whole fused-pipeline candidates (each a fully fused
-    single-group ``PipelinePlan`` at one block size)."""
+    single-group ``PipelinePlan`` at one (block, depth) point).  Unlike
+    the single-pattern path, depth IS part of the timing key: the
+    megakernel's rotating stage scratch is allocated depth-deep, so
+    depth variants are genuinely different executables."""
     from . import pipeline as plmod
     from .codegen_pallas import lower_pipeline_for_timing
 
     n_stages = len(plmod.topo_stages(pipe))
     unfused = plmod.unfused_traffic_words(pipe)
     out: List[PipelineTiming] = []
-    for b, (words, vmem, s_ana, s_cal, steps) in priced:
+    for (b, d), (words, vmem, s_ana, s_cal, steps) in priced:
         variant = PipelinePlan(
             block=int(b), groups=((0, n_stages),),
-            group_blocks=(int(b),), traffic_words=int(words),
+            group_blocks=(int(b),), depths=(int(d),),
+            traffic_words=int(words),
             unfused_traffic_words=unfused, vmem_bytes=int(vmem),
             modeled_seconds=float(s_cal))
         key = pipeline_key(pipe, vmem_budget=vmem_budget, align=align,
-                           extra=("timing", int(b)),
+                           extra=("timing", int(b), int(d)),
                            device="", profile_hash="")
 
         def make_fn(variant=variant):
@@ -931,7 +1044,7 @@ def _time_pipeline_candidates(pipe, priced: List[Tuple], *,
         out.append(PipelineTiming(
             block=int(b), traffic_words=int(words), vmem_bytes=int(vmem),
             analytic_seconds=s_ana, calibrated_seconds=s_cal,
-            steps=steps, measurement=m, plan=variant))
+            steps=steps, measurement=m, plan=variant, depth=int(d)))
     return out
 
 
@@ -941,7 +1054,8 @@ def _observe_pipeline(pipe, timings: List[PipelineTiming]) -> None:
         kind="Pipeline",
         stream_bytes=t.analytic_seconds * HBM_BYTES_PER_S,
         steps=t.steps, measured_s=t.measurement.median_s,
-        key=f"Pipeline:{pipe.name}:{pipe.shared_extent}|b={t.block}")
+        key=f"Pipeline:{pipe.name}:{pipe.shared_extent}"
+            f"|b={t.block}d{t.depth}")
         for t in timings]
     if samples:
         calibrate.observe(samples)
@@ -949,9 +1063,12 @@ def _observe_pipeline(pipe, timings: List[PipelineTiming]) -> None:
 
 def _price_whole_pipeline(pipe, *, vmem_budget: int, align: int,
                           max_points: int, profile,
-                          counters: Dict[str, int]) -> List[Tuple]:
-    """Every feasible fully fused block candidate, priced and sorted
-    best-first (the analytic shortlist of the whole DAG)."""
+                          counters: Dict[str, int],
+                          depths: Tuple[int, ...] = DEPTHS) -> List[Tuple]:
+    """Every feasible fully fused (block, depth) candidate, priced and
+    sorted best-first (the analytic shortlist of the whole DAG).
+    Entries are ``((block, depth), (words, vmem, s_ana, s_cal, steps))``;
+    ties in calibrated seconds break toward the shallowest depth."""
     from . import pipeline as plmod
 
     n_stages = len(plmod.topo_stages(pipe))
@@ -961,11 +1078,13 @@ def _price_whole_pipeline(pipe, *, vmem_budget: int, align: int,
         return []
     priced = []
     for b in _pipeline_candidates(pipe, align, max_points):
-        res = _price_pipeline_group(whole, b, vmem_budget=vmem_budget,
-                                    profile=profile, counters=counters)
-        if res is not None:
-            priced.append((b, res))
-    priced.sort(key=lambda t: (t[1][0], t[1][3], -t[1][1]))
+        for d in depths:
+            res = _price_pipeline_group(whole, b, vmem_budget=vmem_budget,
+                                        profile=profile, counters=counters,
+                                        depth=d)
+            if res is not None:
+                priced.append(((b, d), res))
+    priced.sort(key=lambda t: (t[1][0], t[1][3], t[0][1], -t[1][1]))
     return priced
 
 
@@ -979,18 +1098,20 @@ def measured_pipeline_shortlist(pipe, *,
                                 warmup: int = MEASURE_WARMUP,
                                 repeat: int = MEASURE_REPEAT,
                                 calibrate_update: bool = True,
-                                priced: Optional[List[Tuple]] = None
+                                priced: Optional[List[Tuple]] = None,
+                                depths: Tuple[int, ...] = DEPTHS
                                 ) -> List[PipelineTiming]:
     """Hybrid step for a pipeline DAG: analytically shortlist fully
-    fused block candidates, lower the top-k whole megakernels, time
-    them, optionally fold the samples into the calibration profile.
-    ``priced`` reuses an already-computed shortlist (``explore_pipeline``
-    passes its DP's whole-range pricing) instead of re-pricing."""
+    fused (block, depth) candidates, lower the top-k whole megakernels
+    (depth-deep rotating stage scratch included), time them, optionally
+    fold the samples into the calibration profile.  ``priced`` reuses
+    an already-computed shortlist (``explore_pipeline`` passes its DP's
+    whole-range pricing) instead of re-pricing."""
     if priced is None:
         priced = _price_whole_pipeline(
             pipe, vmem_budget=vmem_budget, align=align,
             max_points=max_points, profile=_resolve_profile(profile),
-            counters={"explored": 0, "pruned": 0})
+            counters={"explored": 0, "pruned": 0}, depths=depths)
     timings = _time_pipeline_candidates(
         pipe, priced[:max(top_k, 1)], vmem_budget=vmem_budget,
         align=align, timing_db=timing_db, warmup=warmup, repeat=repeat)
@@ -1009,28 +1130,36 @@ def explore_pipeline(pipe, *,
                      timing_db=None,
                      profile=None,
                      warmup: int = MEASURE_WARMUP,
-                     repeat: int = MEASURE_REPEAT) -> PipelinePlan:
+                     repeat: int = MEASURE_REPEAT,
+                     depths: Tuple[int, ...] = DEPTHS) -> PipelinePlan:
     """Joint design-space exploration for a pattern pipeline DAG.
 
     One tile candidate set is enumerated for the shared streaming
-    domain (dtype-aware sublane alignment, ragged divisors); each
-    candidate prices the *fused* megakernel across the whole terminal
-    set -- external traffic (fan-out tiles and stages charged once)
-    plus metapipeline overlap, with inter-stage traffic = 0 because
-    intermediates live in the VMEM plan.  When no fused candidate fits
-    VMEM the DAG is split into contiguous topological groups at the
-    cheapest cuts, each group free to pick its *own* block size (the
-    split paths need not agree); every cut intermediate round-trips
-    HBM.  Results are cached keyed on the topological DAG signature
-    (+ device kind + calibration-profile hash).
+    domain (dtype-aware sublane alignment, ragged divisors) and crossed
+    with the metapipeline buffer depths in ``depths`` (default
+    ``DEPTHS = (2, 3, 4)``); each (block, depth) candidate prices the
+    *fused* megakernel across the whole terminal set -- external
+    traffic (fan-out tiles and stages charged once) plus metapipeline
+    overlap and the DMA issue latency left exposed at that depth, with
+    ``depth x`` VMEM charged per stage buffer and inter-stage traffic
+    = 0 because intermediates live in the VMEM plan.  Ties in modeled
+    seconds break toward the shallowest depth.  When no fused candidate
+    fits VMEM the DAG is split into contiguous topological groups at
+    the cheapest cuts, each group free to pick its *own* block size and
+    depth (the split paths need not agree); every cut intermediate
+    round-trips HBM.  The chosen per-group depths land in
+    ``PipelinePlan.depths``.  Results are cached keyed on the
+    topological DAG signature (+ device kind + calibration-profile
+    hash + the resolved depth set).
 
     ``measure="top_k"`` (or ``REPRO_MEASURE=top_k``): when the analytic
-    winner is fully fused, the top-k block candidates are lowered as
-    whole megakernels and timed; the measured argmin wins and the
-    samples update the device calibration profile before the plan is
-    cached.  A split-fallback winner keeps the analytic choice (its
-    groups execute as separate kernels; timing them jointly would
-    conflate the cut traffic with tile effects).
+    winner is fully fused, the top-k (block, depth) candidates are
+    lowered as whole megakernels -- rotating depth-deep stage scratch
+    included -- and timed; the measured argmin wins and the samples
+    update the device calibration profile before the plan is cached.
+    A split-fallback winner keeps the analytic choice (its groups
+    execute as separate kernels; timing them jointly would conflate
+    the cut traffic with tile effects).
     """
     from . import pipeline as plmod  # local import: keep layering thin
 
@@ -1041,7 +1170,8 @@ def explore_pipeline(pipe, *,
     n_stages = len(topo)
     cands = _pipeline_candidates(pipe, align, max_points)
 
-    extra: Tuple = (tuple(cands),)
+    extra: Tuple = (tuple(cands),
+                    ("depths",) + tuple(int(d) for d in depths))
     if measure:
         extra += (("measure", measure, int(top_k)),)
 
@@ -1061,11 +1191,13 @@ def explore_pipeline(pipe, *,
     # shortlist below (no duplicate fuse_dag/plan_memory work)
     priced_whole = _price_whole_pipeline(
         pipe, vmem_budget=vmem_budget, align=align,
-        max_points=max_points, profile=prof, counters=counters)
+        max_points=max_points, profile=prof, counters=counters,
+        depths=depths)
 
     def best_group(i0: int, i1: int, memo: Dict):
-        """Per-group block choice: cheapest (words, seconds, vmem,
-        block) for topo stages [i0, i1) over the candidate tiles."""
+        """Per-group (block, depth) choice: cheapest (words, seconds,
+        vmem, block, depth) for topo stages [i0, i1) over the candidate
+        tiles crossed with the buffer depths (shallowest wins ties)."""
         if (i0, i1) in memo:
             return memo[(i0, i1)]
         best = None
@@ -1079,14 +1211,16 @@ def explore_pipeline(pipe, *,
             sub_pipe = None
         if sub_pipe is not None:
             for b in cands:
-                priced = _price_pipeline_group(
-                    sub_pipe, b, vmem_budget=vmem_budget, profile=prof,
-                    counters=counters)
-                if priced is None:
-                    continue
-                rank = (priced[0], priced[3], -priced[1])
-                if best is None or rank < (best[0], best[1], -best[2]):
-                    best = (priced[0], priced[3], priced[1], b)
+                for d in depths:
+                    priced = _price_pipeline_group(
+                        sub_pipe, b, vmem_budget=vmem_budget,
+                        profile=prof, counters=counters, depth=d)
+                    if priced is None:
+                        continue
+                    rank = (priced[0], priced[3], d, -priced[1])
+                    if best is None or rank < (best[0], best[1],
+                                               best[4], -best[2]):
+                        best = (priced[0], priced[3], priced[1], b, d)
         memo[(i0, i1)] = best
         return best
 
@@ -1095,12 +1229,13 @@ def explore_pipeline(pipe, *,
     # first and later candidates must be strictly cheaper)
     memo: Dict = {}
     if priced_whole:
-        b, (words, vmem, _, s_cal, _) = priced_whole[0]
-        memo[(0, n_stages)] = (words, s_cal, vmem, b)
+        (b, d), (words, vmem, _, s_cal, _) = priced_whole[0]
+        memo[(0, n_stages)] = (words, s_cal, vmem, b, d)
     else:
         memo[(0, n_stages)] = None
     state: List = [None] * (n_stages + 1)
-    state[0] = (0, 0.0, 0, (), ())   # words, seconds, vmem, groups, blocks
+    # words, seconds, vmem, groups, blocks, depths
+    state[0] = (0, 0.0, 0, (), (), ())
     for i in range(1, n_stages + 1):
         for j in range(0, i):
             if state[j] is None:
@@ -1110,7 +1245,8 @@ def explore_pipeline(pipe, *,
                 continue
             cand = (state[j][0] + g[0], state[j][1] + g[1],
                     max(state[j][2], g[2]),
-                    state[j][3] + ((j, i),), state[j][4] + (g[3],))
+                    state[j][3] + ((j, i),), state[j][4] + (g[3],),
+                    state[j][5] + (g[4],))
             if state[i] is None or (cand[0], cand[1]) \
                     < (state[i][0], state[i][1]):
                 state[i] = cand
@@ -1126,7 +1262,8 @@ def explore_pipeline(pipe, *,
         traffic_words=int(best[0]),
         unfused_traffic_words=plmod.unfused_traffic_words(pipe),
         vmem_bytes=int(best[2]), modeled_seconds=float(best[1]),
-        explored=counters["explored"], pruned=counters["pruned"])
+        explored=counters["explored"], pruned=counters["pruned"],
+        depths=best[5])
 
     if measure == "top_k" and plan.fused:
         # the resolved profile (prof=None means "uncalibrated", whether
@@ -1137,11 +1274,12 @@ def explore_pipeline(pipe, *,
             max_points=max_points,
             profile=prof if prof is not None else False,
             timing_db=timing_db, warmup=warmup, repeat=repeat,
-            priced=priced_whole)
+            priced=priced_whole, depths=depths)
         if timings:
             win = min(timings,
                       key=lambda t: (t.measurement.median_s,
-                                     t.traffic_words, -t.vmem_bytes))
+                                     t.traffic_words, t.depth,
+                                     -t.vmem_bytes))
             plan = dataclasses.replace(
                 win.plan,
                 unfused_traffic_words=plan.unfused_traffic_words,

@@ -44,6 +44,7 @@ class BufferAlloc:
     dtype: str
     double_buffered: bool
     ports: int         # readers + writers (template parameterization)
+    depth: int = 1     # buffer copies charged (2 = double buffer)
 
 
 @dataclasses.dataclass
@@ -53,8 +54,8 @@ class MemoryPlan:
 
     @property
     def total_bytes(self) -> int:
-        return sum(b.words * np.dtype(b.dtype).itemsize *
-                   (2 if b.double_buffered else 1) for b in self.buffers)
+        return sum(b.words * np.dtype(b.dtype).itemsize * max(b.depth, 1)
+                   for b in self.buffers)
 
     @property
     def fits(self) -> bool:
@@ -62,10 +63,10 @@ class MemoryPlan:
 
     def describe(self) -> str:
         lines = [f"{'name':24s} {'kind':14s} {'words':>10s} "
-                 f"{'dbl':>4s} {'ports':>5s}"]
+                 f"{'depth':>5s} {'ports':>5s}"]
         for b in self.buffers:
             lines.append(f"{b.name:24s} {b.kind:14s} {b.words:>10d} "
-                         f"{str(b.double_buffered):>4s} {b.ports:>5d}")
+                         f"{b.depth:>5d} {b.ports:>5d}")
         lines.append(f"total {self.total_bytes} B / budget "
                      f"{self.vmem_budget_bytes} B -> "
                      f"{'OK' if self.fits else 'OVERFLOW'}")
@@ -73,8 +74,28 @@ class MemoryPlan:
 
 
 def plan_memory(p: Union[ir.Pattern, Sequence[ir.Pattern]],
-                vmem_budget_bytes: int = VMEM_BYTES) -> MemoryPlan:
+                vmem_budget_bytes: int = VMEM_BYTES,
+                depth: int = 2) -> MemoryPlan:
+    """VMEM allocation plan for one tiled pattern (or the per-terminal
+    trees of a fused pipeline DAG, allocated jointly).
+
+    Parameters
+    ----------
+    p : tiled pattern, or a sequence of patterns lowering into one
+        kernel (buffers shared across trees are charged once).
+    vmem_budget_bytes : on-chip capacity the plan is checked against
+        (``MemoryPlan.fits``); on the FPGA this is BRAM capacity.
+    depth : metapipeline buffer depth charged for every stage-crossing
+        buffer (a strided pattern's non-hoisted loads).  Depth 2 is the
+        classic double buffer; deeper buffering multiplies the charged
+        bytes, so under a fixed budget it competes directly with bigger
+        tiles -- the trade ``dse.explore`` searches.  Hoisted preloads,
+        caches, FIFOs and CAM accumulators stay single-buffered.
+    """
     from .fusion import tile_copy_key  # local import: avoid cycle
+
+    if depth < 2:
+        raise ValueError(f"metapipeline depth must be >= 2, got {depth}")
 
     roots = tuple(p) if isinstance(p, (list, tuple)) else (p,)
     buffers: List[BufferAlloc] = []
@@ -92,25 +113,27 @@ def plan_memory(p: Union[ir.Pattern, Sequence[ir.Pattern]],
     seen = set()
     idx = [0]
 
-    def visit(q: ir.Pattern, depth: int):
+    def visit(q: ir.Pattern):
         for tc in q.loads:
             k = tile_copy_key(tc)
             if k in seen:
                 continue
             seen.add(k)
             # a strided pattern's loads are its metapipeline stages:
-            # every buffer crossing a stage boundary double-buffers
-            # (WAR avoidance between overlapped outer iterations);
+            # every buffer crossing a stage boundary rotates ``depth``
+            # copies (WAR avoidance between overlapped outer
+            # iterations; depth 2 = the classic double buffer);
             # hoisted preloads are loop-invariant, so a single copy.
             dbl = q.strided and not tc.hoisted
             kind = "double_buffer" if dbl else "buffer"
             buffers.append(BufferAlloc(
                 name=f"{tc.name}#{idx[0]}", kind=kind, words=tc.words,
                 dtype=tc.dtype, double_buffered=dbl,
-                ports=readers.get(k, 1) + 1))
+                ports=readers.get(k, 1) + 1,
+                depth=depth if dbl else 1))
             idx[0] += 1
             if isinstance(tc.src, ir.Pattern):
-                visit(tc.src, depth + 1)
+                visit(tc.src)
         for a in q.accesses:
             if isinstance(a.src, ir.Tensor) and not a.affine:
                 buffers.append(BufferAlloc(
@@ -119,7 +142,7 @@ def plan_memory(p: Union[ir.Pattern, Sequence[ir.Pattern]],
                     double_buffered=False, ports=2))
                 idx[0] += 1
             elif isinstance(a.src, ir.Pattern):
-                visit(a.src, depth + 1)
+                visit(a.src)
         if isinstance(q, ir.GroupByFold) and not q.strided:
             buffers.append(BufferAlloc(
                 name=f"{q.name}_acc#{idx[0]}", kind="cam_dense",
@@ -133,8 +156,8 @@ def plan_memory(p: Union[ir.Pattern, Sequence[ir.Pattern]],
                 double_buffered=False, ports=2))
             idx[0] += 1
         if q.inner is not None:
-            visit(q.inner, depth + 1)
+            visit(q.inner)
 
     for root in roots:
-        visit(root, 0)
+        visit(root)
     return MemoryPlan(buffers, vmem_budget_bytes)

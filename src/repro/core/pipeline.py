@@ -65,6 +65,13 @@ class Pipeline:
     ``outputs=()`` infers the terminal set: every stage no other stage
     consumes.  Chains need no change -- the last stage is the single
     inferred output.
+
+    The fused lowering path (``fuse_dag`` -> ``codegen_pallas.
+    lower_fused_pipeline``) runs the whole DAG as one megakernel with
+    intermediates in VMEM; ``dse.explore_pipeline`` picks the block
+    size and the metapipeline buffer depth jointly (see ``schedule`` /
+    ``fused_memory_plan``'s ``depth`` knob) and falls back to
+    contiguous topological splits when nothing fits VMEM.
     """
 
     name: str
@@ -351,14 +358,17 @@ def fuse(pipe: Pipeline, block: int, *,
 
 
 def schedule(pipe: Pipeline, block: int, *,
-             vmem_budget_words: int = VMEM_BYTES // 4
-             ) -> Optional[Metapipeline]:
+             vmem_budget_words: int = VMEM_BYTES // 4,
+             depth: int = 2) -> Optional[Metapipeline]:
     """Metapipeline schedule of the fused kernel (the first terminal's
-    tree -- producer stages and boundary-crossing loads all
-    double-buffered; shared stages appear identically in every
-    terminal's schedule)."""
+    tree -- producer stages and boundary-crossing loads all buffered at
+    ``depth`` rotating copies, 2 = classic double buffer; shared stages
+    appear identically in every terminal's schedule).
+    ``dse.explore_pipeline`` searches ``depth`` jointly with the block
+    size and records the choice in ``PipelinePlan.depths``."""
     fdag = fuse_dag(pipe, block, vmem_budget_words=vmem_budget_words)
-    return build_schedule(fdag.terminals[0][1], vmem_budget_words)
+    return build_schedule(fdag.terminals[0][1], vmem_budget_words,
+                          depth=depth)
 
 
 # --------------------------------------------------------------------------
@@ -474,12 +484,16 @@ def fused_traffic_words(pipe: Pipeline, block: int, *,
 
 
 def fused_memory_plan(pipe: Pipeline, block: int, *,
-                      vmem_budget_bytes: int = VMEM_BYTES):
+                      vmem_budget_bytes: int = VMEM_BYTES,
+                      depth: int = 2):
     """VMEM plan of the fused kernel across the whole terminal set
-    (stage scratch double-buffered; fan-out scratch counted once)."""
+    (stage scratch charged at ``depth`` rotating copies -- 2 = classic
+    double buffer -- so deeper buffering competes with bigger tiles
+    under the budget; fan-out scratch counted once)."""
     fdag = fuse_dag(pipe, block,
                     vmem_budget_words=vmem_budget_bytes // 4)
-    return plan_memory(fdag.patterns, vmem_budget_bytes=vmem_budget_bytes)
+    return plan_memory(fdag.patterns, vmem_budget_bytes=vmem_budget_bytes,
+                       depth=depth)
 
 
 # --------------------------------------------------------------------------

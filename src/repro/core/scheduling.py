@@ -4,9 +4,12 @@ For every *strided* pattern in the tiled IR we build a metapipeline
 schedule: a topological sort of the body into stages, where each stage
 is a tile load, a lifted compute stage, the main inner pattern, or the
 tile store.  Every buffer crossing a stage boundary is promoted to a
-double buffer (WAR-hazard avoidance between overlapped outer
-iterations); hoisted (loop-invariant) loads become a preload step
-("Pipe 0" of Fig. 6) outside the metapipeline.
+rotating buffer of configurable ``depth`` (WAR-hazard avoidance
+between overlapped outer iterations; depth 2 -- the classic double
+buffer -- is the minimum that lets producer and consumer stages
+overlap, deeper buffers additionally hide DMA issue latency, see
+``cost.metapipeline_time``); hoisted (loop-invariant) loads become a
+preload step ("Pipe 0" of Fig. 6) outside the metapipeline.
 
 The schedule also records the paper's two scheduling optimizations:
   * accumulator dedup -- a MultiFold tiled into a nested MultiFold
@@ -35,6 +38,7 @@ class Stage:
     words: int                    # data moved or buffered
     double_buffered: bool = False
     deps: Tuple[str, ...] = ()
+    depth: int = 1                # buffer copies (2 = double buffer)
 
 
 @dataclasses.dataclass
@@ -46,17 +50,21 @@ class Metapipeline:
     fused_accumulator: bool       # accumulator dedup applied
     accumulator_forwarding: bool  # acc does not fit on-chip
     children: List["Metapipeline"]
+    depth: int = 2                # stage-crossing buffer depth
 
     def describe(self, indent: int = 0) -> str:
         pad = "  " * indent
         lines = [f"{pad}Metapipeline[{self.pattern}] x{self.outer_trips}"
+                 + (f" depth={self.depth}" if self.depth != 2 else "")
                  + (" (acc-fused)" if self.fused_accumulator else "")
                  + (" (acc-forwarding)" if self.accumulator_forwarding
                     else "")]
         for s in self.preloads:
             lines.append(f"{pad}  Pipe0 preload {s.name} ({s.words} words)")
         for i, s in enumerate(self.stages):
-            db = " [dbl-buf]" if s.double_buffered else ""
+            db = ""
+            if s.double_buffered:
+                db = " [dbl-buf]" if s.depth == 2 else f" [buf x{s.depth}]"
             lines.append(f"{pad}  Stage{i+1} {s.kind} {s.name}"
                          f" ({s.words} words){db}")
         for c in self.children:
@@ -69,13 +77,31 @@ def _acc_words(p: ir.MultiFold) -> int:
 
 
 def build_schedule(p: ir.Pattern,
-                   vmem_budget_words: int = VMEM_BYTES // 4
-                   ) -> Optional[Metapipeline]:
-    """Schedule for the outermost strided pattern (None if untiled)."""
+                   vmem_budget_words: int = VMEM_BYTES // 4,
+                   depth: int = 2) -> Optional[Metapipeline]:
+    """Metapipeline schedule for the outermost strided pattern.
+
+    Parameters
+    ----------
+    p : tiled (strided) pattern; ``None`` is returned for an untiled
+        program (nothing to metapipeline).
+    vmem_budget_words : on-chip capacity used for the accumulator-
+        forwarding check (an accumulator larger than this gets a
+        forwarding path instead of a resident buffer).
+    depth : stage-crossing buffer depth.  Every non-hoisted stage
+        buffer is annotated with this depth (2 = classic double
+        buffer; deeper buffers hide more DMA issue latency at the cost
+        of ``depth x`` VMEM, see ``cost.metapipeline_time`` /
+        ``memory.plan_memory``).  Hoisted preloads stay single-buffered
+        (depth 1).  The DSE (``dse.explore`` / ``dse.explore_pipeline``)
+        searches this knob jointly with tile sizes.
+    """
+    if depth < 2:
+        raise ValueError(f"metapipeline depth must be >= 2, got {depth}")
     if not p.strided:
         # descend: the root may be a plain wrapper
         if p.inner is not None:
-            return build_schedule(p.inner, vmem_budget_words)
+            return build_schedule(p.inner, vmem_budget_words, depth)
         return None
 
     preloads: List[Stage] = []
@@ -89,14 +115,16 @@ def build_schedule(p: ir.Pattern,
 
     for tc in tensor_loads:
         st = Stage(name=tc.name, kind="preload" if tc.hoisted else "load",
-                   words=tc.words, double_buffered=not tc.hoisted)
+                   words=tc.words, double_buffered=not tc.hoisted,
+                   depth=1 if tc.hoisted else depth)
         (preloads if tc.hoisted else stages).append(st)
 
     load_names = tuple(s.name for s in stages if s.kind == "load")
     for tc in stage_loads:
         stages.append(Stage(name=tc.name, kind="compute", words=tc.words,
-                            double_buffered=True, deps=load_names))
-        sub = build_schedule(tc.src, vmem_budget_words)
+                            double_buffered=True, deps=load_names,
+                            depth=depth))
+        sub = build_schedule(tc.src, vmem_budget_words, depth)
         if sub is not None:
             children.append(sub)
 
@@ -115,8 +143,8 @@ def build_schedule(p: ir.Pattern,
         stages.append(Stage(
             name=p.inner.name, kind="body", words=body_words,
             double_buffered=True,
-            deps=tuple(s.name for s in stages)))
-        sub = build_schedule(p.inner, vmem_budget_words)
+            deps=tuple(s.name for s in stages), depth=depth))
+        sub = build_schedule(p.inner, vmem_budget_words, depth)
         if sub is not None:
             children.append(sub)
 
@@ -133,13 +161,16 @@ def build_schedule(p: ir.Pattern,
     return Metapipeline(
         pattern=f"{type(p).__name__}:{p.name}", outer_trips=p.trip_count,
         stages=stages, preloads=preloads, fused_accumulator=fused_acc,
-        accumulator_forwarding=fwd, children=children)
+        accumulator_forwarding=fwd, children=children, depth=depth)
 
 
 def model_speedup(mp: Metapipeline, flops_per_body: float,
                   bytes_per_word: int = 4) -> Tuple[float, float, float]:
     """(sequential_s, pipelined_s, speedup) under the two-resource model:
-    load/store stages stream at HBM bandwidth, body at peak compute."""
+    load/store stages stream at HBM bandwidth, body at peak compute.
+    The schedule's buffer ``depth`` feeds the exposed-DMA-latency term
+    of ``cost.metapipeline_time``, so the ratio can drop below 1 when
+    latency dominates a shallow pipeline (the DSE prices that)."""
     costs = []
     for s in mp.stages:
         if s.kind in ("load", "store"):
@@ -149,5 +180,5 @@ def model_speedup(mp: Metapipeline, flops_per_body: float,
         else:
             costs.append(StageCost(s.name, s.kind,
                                    stage_seconds_compute(flops_per_body)))
-    seq, pipe = metapipeline_time(costs, mp.outer_trips)
+    seq, pipe = metapipeline_time(costs, mp.outer_trips, depth=mp.depth)
     return seq, pipe, seq / pipe if pipe > 0 else 1.0

@@ -1,0 +1,60 @@
+"""The docs link checker behind CI's docs-check step."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+import check_docs  # noqa: E402
+
+
+def _write(root, rel, body):
+    path = os.path.join(root, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(body)
+    return path
+
+
+def test_repo_docs_have_no_broken_links():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    files = check_docs.markdown_files(os.path.realpath(root), [])
+    assert files  # README + docs/ must exist
+    broken, _ = check_docs.check(os.path.realpath(root), files)
+    assert broken == []
+
+
+def test_broken_relative_link_fails(tmp_path):
+    root = str(tmp_path)
+    _write(root, "README.md", "[docs](docs/missing.md)\n")
+    assert check_docs.main(["--root", root]) == 1
+
+
+def test_good_links_and_anchors_pass(tmp_path):
+    root = str(tmp_path)
+    _write(root, "docs/a.md", "# Top Section\nsee [b](b.md#other)\n")
+    _write(root, "docs/b.md", "# Other\nback to [a](a.md#top-section)\n")
+    _write(root, "README.md",
+           "[a](docs/a.md)\n[self](#intro)\n# Intro\n")
+    assert check_docs.main(["--root", root]) == 0
+
+
+def test_missing_anchor_in_target_fails(tmp_path):
+    root = str(tmp_path)
+    _write(root, "docs/a.md", "# Only Heading\n")
+    _write(root, "README.md", "[a](docs/a.md#nope)\n")
+    assert check_docs.main(["--root", root]) == 1
+
+
+def test_external_and_escaping_links_do_not_fail(tmp_path):
+    root = str(tmp_path)
+    _write(root, "README.md",
+           "[x](https://example.com/page)\n"
+           "[badge](../../actions/workflows/ci.yml)\n")
+    assert check_docs.main(["--root", root]) == 0
+
+
+def test_code_fences_are_ignored(tmp_path):
+    root = str(tmp_path)
+    _write(root, "README.md",
+           "```md\n[broken](not/a/file.md)\n```\n")
+    assert check_docs.main(["--root", root]) == 0

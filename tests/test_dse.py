@@ -79,24 +79,29 @@ def test_tile_space_covers_all_named_domains():
 
 # ------------------------------------------------- argmin == brute force
 def test_argmin_matches_exhaustive_search():
+    """Brute force over the full (sizes x depth) cross product, with
+    the same rank key the shortlist uses (shallowest depth wins
+    modeled-seconds ties)."""
     p = dse.gemm_program(256, 256, 256)
     plan = dse.explore(p, cache=False)
 
     space = dse.tile_space(p)
     names = sorted(space)
-    best_key, best_sizes = None, None
+    best_key, best_sizes, best_depth = None, None, None
     for combo in itertools.product(*(space[n] for n in names)):
         sizes = dict(zip(names, combo))
-        priced = dse.price(p, sizes)
-        if priced is None:
-            continue
-        key = (priced.traffic_words, priced.modeled_seconds,
-               -priced.vmem_bytes)
-        if best_key is None or key < best_key:
-            best_key, best_sizes = key, sizes
+        for d in dse.DEPTHS:
+            priced = dse.price(p, sizes, depth=d)
+            if priced is None:
+                continue
+            key = (priced.traffic_words, priced.modeled_seconds, d,
+                   -priced.vmem_bytes)
+            if best_key is None or key < best_key:
+                best_key, best_sizes, best_depth = key, sizes, d
     assert best_sizes is not None
     assert plan.sizes == {k: tuple(v) for k, v in best_sizes.items()}
     assert plan.traffic_words == best_key[0]
+    assert plan.depth == best_depth
 
 
 # ------------------------------------------------------- VMEM pruning
@@ -115,11 +120,13 @@ def test_no_fitting_candidate_raises():
 
 
 def test_priced_plan_respects_memory_plan():
-    """plan_memory on the plan's tiled IR agrees with the plan."""
+    """plan_memory on the plan's tiled IR (at the plan's chosen buffer
+    depth) agrees with the plan."""
     p = dse.gemm_program(512, 512, 512)
     plan = dse.explore(p, cache=False)
     from repro.core.memory import plan_memory
-    mem = plan_memory(tile(p, plan.sizes), vmem_budget_bytes=VMEM_BYTES)
+    mem = plan_memory(tile(p, plan.sizes), vmem_budget_bytes=VMEM_BYTES,
+                      depth=plan.depth)
     assert mem.fits
     assert mem.total_bytes == plan.vmem_bytes
 
