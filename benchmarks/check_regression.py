@@ -76,6 +76,17 @@ def timing_notes(doc: Dict) -> List[str]:
             notes.append(
                 "measured rows taken with repeat < 3: medians may be "
                 "noisy; prefer --repeat 3+ before trusting rankings")
+    res = (doc.get("resilience") or {}).get("counts") or {}
+    if res:
+        # degradation is tolerated, never hidden: a run that
+        # quarantined candidates or fell back to analytic plans says
+        # so next to the numbers it produced
+        summary = ", ".join(f"{k}={v}" for k, v in sorted(res.items()))
+        notes.append(f"resilience degradation in this run: {summary}")
+        faults = (doc.get("resilience") or {}).get("faults")
+        if faults:
+            notes.append(f"fault injection was active: "
+                         f"REPRO_FAULTS={faults}")
     return notes
 
 

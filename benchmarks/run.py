@@ -36,6 +36,12 @@ Prints ``name,us_per_call,derived`` CSV:
               of the analytic and the calibrated model's candidate
               ranking against the measured one, plus the calibration
               profile the samples refreshed.
+  resilience/* degradation accounting for the whole run
+              (``core.resilience.LOG``): one row per action taken --
+              candidates quarantined, transient retries, analytic
+              fallbacks, stores rebuilt from corruption.  Zero rows on
+              a clean run; the CI chaos-smoke step injects faults
+              (``REPRO_FAULTS``) and asserts these counts are nonzero.
 
 All wall times go through ``core.measure.measure``: warmup runs
 (compilation) excluded, median of ``--repeat`` (default 3) fenced
@@ -62,6 +68,7 @@ import numpy as np
 
 from repro.core import ir
 from repro.core import measure as measure_mod
+from repro.core import resilience
 from repro.core.codegen_jax import execute
 from repro.core.cost import traffic
 from repro.core.scheduling import build_schedule, model_speedup
@@ -121,7 +128,15 @@ def write_json(out: str, error: str = "") -> str:
                       or TIMING["repeat"] or 3,
                       "warmup": TIMING["warmup"],
                       "device": measure_mod.device_kind(),
-                      "interpret": measure_mod.interpret_mode()}}
+                      "interpret": measure_mod.interpret_mode()},
+           # degradation accounting for the run: how many candidates
+           # were quarantined / retried / fell back (the chaos-smoke CI
+           # step asserts these are nonzero under injected faults)
+           "resilience": {
+               "counts": resilience.LOG.counts(),
+               "faults": os.environ.get("REPRO_FAULTS", ""),
+               "events": [e.to_json()
+                          for e in resilience.LOG.events()[:200]]}}
     if error:
         doc["error"] = error
     with open(path, "w") as f:
@@ -470,8 +485,11 @@ def measured():
     tables = []
 
     for name, p in _kernel_proxy_programs().items():
+        # cache=None: the default on-disk tuning cache supplies the
+        # persistent candidate quarantine (crashing candidates are
+        # skipped on re-runs instead of re-attempted)
         ts = dse.measured_shortlist(p, top_k=top_k, warmup=warmup,
-                                    repeat=repeat)
+                                    repeat=repeat, cache=None)
         tables.append((f"kernel/{name}", type(p).__name__,
                        [(t.analytic_seconds, t.steps,
                          t.measurement.median_s, str(dict(t.sizes)))
@@ -479,7 +497,8 @@ def measured():
     for name, builder in PIPELINES.items():
         pipe, _, _ = builder()
         ts = dse.measured_pipeline_shortlist(pipe, top_k=top_k,
-                                             warmup=warmup, repeat=repeat)
+                                             warmup=warmup, repeat=repeat,
+                                             cache=None)
         # measured depth-2-vs-best: the timed (block, depth) variants
         # execute depth-deep rotating scratch, so when both the winner
         # and a depth-2 variant were timed the delta is real, not
@@ -553,6 +572,21 @@ def measured():
          timed_workloads=len(rhos_a))
 
 
+def resilience_rows() -> None:
+    """One row per degradation action the run took (quarantined /
+    retried / fallback / rebuilt / skipped), plus a total.  Zero rows
+    on a clean run; the chaos-smoke CI step asserts they are NONZERO
+    under injected faults -- proving the tuning runtime degraded
+    instead of dying."""
+    counts = resilience.LOG.counts()
+    for action in sorted(counts):
+        emit(f"resilience/{action}", 0, counts[action],
+             count=counts[action])
+    if counts:
+        emit("resilience/total", 0, sum(counts.values()),
+             count=sum(counts.values()))
+
+
 SECTIONS = {
     "fig7": fig7,
     "fig5c": fig5c,
@@ -616,6 +650,9 @@ def main(argv=None) -> None:
         error = f"{type(e).__name__}: {e}"
         raise
     finally:
+        # degradation summary rows come last so every section's
+        # quarantine/fallback/retry activity is already accounted
+        resilience_rows()
         print(f"\n{len(ROWS)} benchmark rows emitted")
         if args.json:
             # written even on zero rows or a mid-section crash: the CI

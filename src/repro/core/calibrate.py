@@ -272,12 +272,11 @@ def profile_path(device: Optional[str] = None,
 
 
 def _read_doc(path: str) -> Dict:
-    try:
-        with open(path) as f:
-            doc = json.load(f)
-        return doc if isinstance(doc, dict) else {}
-    except (OSError, ValueError):
-        return {}
+    """Crash-safe profile/ledger read: a truncated or corrupt file is
+    quarantined to ``<path>.corrupt`` (warning names it) and the
+    calibration starts fresh instead of silently dropping data."""
+    from . import resilience
+    return resilience.load_store(path, label="calibration profile")
 
 
 def load_profile(device: Optional[str] = None, *,
@@ -344,17 +343,31 @@ def observe(new_samples: Sequence[Sample], *,
     cached candidate does not double-weight it.  Returns the refreshed
     profile (also the new ``active_profile_hash`` source).
     """
+    from . import resilience
+
     device = device or device_kind()
     path = path or profile_path(device)
-    merged: Dict[str, Sample] = {s.identity: s
-                                 for s in load_samples(device, path=path)}
-    for s in new_samples:
-        merged[s.identity] = s
-    samples = [merged[k] for k in sorted(merged)]
-    prof = fit(samples, device=device)
-    doc = {"profile": prof.to_json(),
-           "samples": [s.to_json() for s in samples]}
-    from .measure import atomic_write_json
-    atomic_write_json(path, doc, prefix=".calibration.", indent=1)
+    fitted: List[CalibrationProfile] = []
+
+    def merge(data: Dict) -> None:
+        # re-reads the ledger *inside* the store lock: samples another
+        # process observed between our load and our write survive
+        merged: Dict[str, Sample] = {}
+        for d in data.get("samples", []):
+            try:
+                s = Sample.from_json(d)
+            except (KeyError, TypeError, ValueError):
+                continue
+            merged[s.identity] = s
+        for s in new_samples:
+            merged[s.identity] = s
+        samples = [merged[k] for k in sorted(merged)]
+        prof = fit(samples, device=device)
+        data["profile"] = prof.to_json()
+        data["samples"] = [s.to_json() for s in samples]
+        fitted.append(prof)
+
+    resilience.locked_update(path, merge, label="calibration profile",
+                             prefix=".calibration.", indent=1)
     _hash_cache.pop(path, None)
-    return prof
+    return fitted[-1]

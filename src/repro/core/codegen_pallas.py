@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from . import ir
+from . import ir, resilience
 from .affine import AffineMap
 
 INTERPRET = True  # container is CPU-only; flip on real TPU
@@ -669,8 +669,8 @@ def lower_fused_chain(p: ir.Pattern, depth: int = 2) -> Callable:
 
 def lower_fused_pipeline(pipe, *, plan=None,
                          vmem_budget: Optional[int] = None,
-                         cache=None, measure: Optional[str] = None
-                         ) -> Callable:
+                         cache=None, measure: Optional[str] = None,
+                         policy=None) -> Callable:
     """Lower a ``pipeline.Pipeline`` (DAG) with a joint-DSE
     ``PipelinePlan``.
 
@@ -685,7 +685,9 @@ def lower_fused_pipeline(pipe, *, plan=None,
     ``.group_lowerings`` records what each group actually compiled to
     (``megakernel`` / ``oracle-chain``) -- check it before quoting the
     plan's fused traffic numbers for an execution.  Multi-output
-    pipelines return a name -> array dict.
+    pipelines return a name -> array dict.  ``policy`` (a
+    ``resilience.Policy``) bounds any measured exploration the call
+    triggers: per-candidate deadlines, quarantine, certification.
     """
     from .cost import VMEM_BYTES
     from .dse import explore_pipeline
@@ -694,7 +696,7 @@ def lower_fused_pipeline(pipe, *, plan=None,
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
     if plan is None:
         plan = explore_pipeline(pipe, vmem_budget=budget, cache=cache,
-                                measure=measure)
+                                measure=measure, policy=policy)
 
     group_depths = plan.depths or (2,) * len(plan.groups)
     runners = []
@@ -778,9 +780,12 @@ def lower_for_timing(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
     from .strip_mine import insert_tile_copies, strip_mine, tile
 
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
+    # chaos hook: REPRO_FAULTS=lower:<p> fails this lowering before any
+    # fallback can mask it -- the caller's quarantine path must fire
+    resilience.inject("lower", f"{type(p).__name__}:{p.name}")
     try:
         t = tile(p, sizes, vmem_budget_words=budget // 4)
-    except Exception:
+    except resilience.EXPECTED_ERRORS:
         # same fallback as dse._tile_ir: interchange/lift may not apply
         t = insert_tile_copies(strip_mine(p, sizes),
                                vmem_budget_words=budget // 4)
@@ -792,7 +797,12 @@ def lower_for_timing(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
         # (or silently skip) the candidate
         jax.eval_shape(lambda: kern(**inputs))
         return (lambda: kern(**inputs)), "pallas"
-    except Exception:
+    except resilience.EXPECTED_ERRORS as e:
+        resilience.record_once(
+            "lower", resilience.classify(e),
+            f"{type(p).__name__}:{p.name}", "fallback",
+            f"pallas template unusable ({e}); codegen_jax oracle of "
+            "the tiled IR times instead")
         run = jax.jit(lambda **kw: execute(t, kw))
         return (lambda: run(**inputs)), "oracle"
 
@@ -808,13 +818,16 @@ def lower_pipeline_for_timing(pipe, plan, *,
     from . import pipeline as plmod
     from .measure import synth_inputs
 
+    # chaos hook mirroring the single-pattern path
+    resilience.inject("lower", f"Pipeline:{pipe.name}")
     inputs = synth_inputs(plmod.external_inputs(pipe), seed=seed)
     call = lower_fused_pipeline(pipe, plan=plan, vmem_budget=vmem_budget)
     return lambda: call(**inputs)
 
 
 def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
-               cache=None, measure: Optional[str] = None) -> Callable:
+               cache=None, measure: Optional[str] = None,
+               policy=None) -> Callable:
     """Tile an *untiled* pattern with a DSE-chosen ``TilePlan`` and lower
     it (paper §4 automated tile-size selection feeding §5 codegen).
 
@@ -827,7 +840,9 @@ def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
     the Pallas/Mosaic grid pipeliner, so the depth shapes the *pricing*
     (VMEM charge + exposed-latency model) rather than the emitted
     kernel; fused pipelines (``lower_fused_pipeline``) realize it as
-    rotating stage scratch.
+    rotating stage scratch.  ``policy`` (a ``resilience.Policy``)
+    bounds any measured exploration: deadlines, quarantine,
+    certification.
     """
     from .cost import VMEM_BYTES
     from .dse import explore
@@ -836,7 +851,7 @@ def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
     if plan is None:
         plan = explore(p, vmem_budget=budget, cache=cache,
-                       measure=measure)
+                       measure=measure, policy=policy)
     call = lower(tile(p, plan.sizes, vmem_budget_words=budget // 4))
     call.tile_plan = plan
     return call

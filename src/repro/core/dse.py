@@ -47,12 +47,11 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import itertools
-import json
 import os
 from typing import Dict, List, Optional, Tuple, Union
 
 
-from . import calibrate, ir
+from . import calibrate, ir, resilience
 from . import measure as measure_mod
 from .cost import HBM_BYTES_PER_S, VMEM_BYTES, stream_seconds, traffic
 from .memory import plan_memory
@@ -204,11 +203,26 @@ def default_cache_path() -> str:
                                           "REPRO_DSE_CACHE")
 
 
-class TuningCache:
-    """On-disk key -> TilePlan store (JSON; atomic rewrite on put).
+# reserved top-level key in the cache document holding the candidate
+# quarantine; plan keys are 32-hex digests, so no collision is possible
+QUARANTINE_KEY = "__quarantine__"
 
-    A corrupt or unreadable file is treated as empty -- the cache is an
-    accelerator, never a correctness dependency.
+
+class TuningCache:
+    """On-disk key -> TilePlan store, crash-safe.
+
+    Persistence goes through ``core.resilience``'s store layer:
+    checksummed JSON, atomic replace, lock-protected read-modify-write
+    on every put (concurrent explorations merge instead of clobbering),
+    and a truncated or corrupt file is quarantined to
+    ``<path>.corrupt`` (a warning names it) with the cache rebuilding
+    fresh -- the cache is an accelerator, never a correctness
+    dependency.
+
+    The same document persists the **candidate quarantine**: a
+    candidate whose lowering, timing or certification failed is
+    recorded under ``__quarantine__`` (keyed per device + interpret
+    mode) and is never re-attempted by later explorations.
     """
 
     def __init__(self, path: Optional[str] = None):
@@ -217,14 +231,27 @@ class TuningCache:
 
     def _load(self) -> Dict[str, Dict]:
         if self._data is None:
-            try:
-                with open(self.path) as f:
-                    self._data = json.load(f)
-                if not isinstance(self._data, dict):
-                    self._data = {}
-            except (OSError, ValueError):
-                self._data = {}
+            self._data = resilience.load_store(self.path,
+                                               label="DSE tuning cache")
         return self._data
+
+    def _update(self, mutate) -> None:
+        """Apply ``mutate(data)`` to the in-memory view AND, under the
+        file lock, to the freshly re-read on-disk state -- entries a
+        concurrent process wrote between our load and this put
+        survive, and our view keeps its own entries even when the
+        write fails (read-only FS)."""
+        mine = self._load()
+        mutate(mine)
+        disk = resilience.locked_update(self.path, mutate,
+                                        label="DSE tuning cache",
+                                        prefix=".dse_cache.")
+        q = {**mine.get(QUARANTINE_KEY, {}),
+             **disk.get(QUARANTINE_KEY, {})}
+        merged = {**mine, **disk}
+        if q:
+            merged[QUARANTINE_KEY] = q
+        self._data = merged
 
     def get(self, key: str, cls=None) -> Optional["TilePlan"]:
         """Fetch a plan; ``cls`` selects the plan dataclass (default
@@ -238,10 +265,24 @@ class TuningCache:
             return None
 
     def put(self, key: str, plan) -> None:
-        data = self._load()
-        data[key] = plan.to_json()
-        measure_mod.atomic_write_json(self.path, data,
-                                      prefix=".dse_cache.")
+        doc = plan.to_json()
+        self._update(lambda data: data.__setitem__(key, doc))
+
+    def quarantine(self, key: str, kind: str, detail: str = "") -> None:
+        """Persist a failed candidate so it is never re-attempted."""
+        entry = {"kind": kind, "detail": detail[:500]}
+
+        def mutate(data: Dict) -> None:
+            data.setdefault(QUARANTINE_KEY, {})[key] = entry
+
+        self._update(mutate)
+
+    def quarantined(self, key: str) -> Optional[Dict]:
+        """The quarantine record for ``key`` ({"kind", "detail"}), or
+        None when the candidate has never failed."""
+        q = self._load().get(QUARANTINE_KEY)
+        entry = q.get(key) if isinstance(q, dict) else None
+        return entry if isinstance(entry, dict) else None
 
     def clear(self) -> None:
         self._data = {}
@@ -285,7 +326,10 @@ def _reads_sig(p: ir.Pattern, enc: int = 0) -> Tuple:
             try:
                 amap = AffineMap.probe(a.index_map, stack)
                 m = (amap.base, amap.mat)
-            except Exception:
+            except (TypeError, ValueError, IndexError):
+                # unit probing a non-affine / non-integer map fails in
+                # exactly these ways; anything else is a real bug in
+                # the map and must surface, not hash as opaque
                 m = "nonaffine"
         out.append((src, tuple(a.window), a.affine, m))
         if isinstance(a.src, ir.Pattern):
@@ -448,9 +492,16 @@ def _tile_ir(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]],
              vmem_budget_words: int) -> ir.Pattern:
     try:
         return tile(p, sizes, vmem_budget_words=vmem_budget_words)
-    except Exception:
+    except resilience.EXPECTED_ERRORS as e:
         # interchange/lift may not apply to every proxy shape; the
-        # strip-mine + copy-insertion core always does.
+        # strip-mine + copy-insertion core always does.  Recorded once
+        # per pattern (price() calls this per candidate) so the
+        # degradation is observable without spamming the event log;
+        # real bugs (AttributeError etc.) propagate.
+        resilience.record_once(
+            "tile", resilience.classify(e),
+            f"{type(p).__name__}:{p.name}", "fallback",
+            f"tile() failed ({e}); strip-mine+copies fallback")
         return insert_tile_copies(strip_mine(p, sizes),
                                   vmem_budget_words=vmem_budget_words)
 
@@ -607,13 +658,22 @@ def _top_distinct_sizes(cands: List[Priced], k: int) -> List[Priced]:
 
 def _time_candidates(p: ir.Pattern, top: List[Priced], *,
                      vmem_budget: int, align: int,
-                     timing_db, warmup: int, repeat: int
+                     timing_db, warmup: int, repeat: int,
+                     policy: Optional[resilience.Policy] = None,
+                     cache: Optional[TuningCache] = None
                      ) -> List[CandidateTiming]:
-    """Lower + time shortlisted candidates (timing-DB memoized; a
-    candidate whose lowering or execution fails is skipped, not fatal).
+    """Lower + time shortlisted candidates (timing-DB memoized).
+
+    Each lower+time runs under the resilience policy's deadline with
+    transient retry; an expected failure (no template, numeric blowup,
+    injected fault, deadline miss) classifies the candidate, records a
+    structured event, and -- when ``cache`` is given -- quarantines it
+    so no later exploration re-attempts the same crash.  Unexpected
+    exceptions still propagate: a real bug must surface.
     """
     from .codegen_pallas import lower_for_timing
 
+    pol = resilience.resolve_policy(policy)
     out: List[CandidateTiming] = []
     for cand in top:
         sizes_sig = tuple(sorted((k, tuple(v))
@@ -626,6 +686,14 @@ def _time_candidates(p: ir.Pattern, top: List[Priced], *,
         key = pattern_key(p, vmem_budget=vmem_budget, align=align,
                           extra=("timing", sizes_sig),
                           device="", profile_hash="")
+        qkey = "time|" + measure_mod.TimingDB.full_key(key)
+        if cache is not None:
+            q = cache.quarantined(qkey)
+            if q is not None:
+                resilience.record_once(
+                    "time", q.get("kind", "unknown"), qkey, "skipped",
+                    "previously quarantined candidate not re-attempted")
+                continue
         how = ["cached"]
 
         def make_fn(sizes=cand.sizes, how=how):
@@ -634,10 +702,16 @@ def _time_candidates(p: ir.Pattern, top: List[Priced], *,
             return fn
 
         try:
-            m = measure_mod.timed(key, make_fn, db=timing_db,
-                                  warmup=warmup, repeat=repeat)
-        except Exception:
-            continue  # candidate not executable on this backend
+            m = resilience.call_guarded(
+                lambda: measure_mod.timed(key, make_fn, db=timing_db,
+                                          warmup=warmup, repeat=repeat),
+                stage="time", key=qkey, policy=pol)
+        except resilience.CandidateFailure as e:
+            resilience.record("time", e.kind, qkey, "quarantined",
+                              e.detail)
+            if cache is not None:
+                cache.quarantine(qkey, e.kind, e.detail)
+            continue
         out.append(CandidateTiming(
             sizes=dict(cand.sizes), traffic_words=cand.traffic_words,
             vmem_bytes=cand.vmem_bytes,
@@ -671,12 +745,18 @@ def measured_shortlist(p: ir.Pattern, *,
                        timing_db=None,
                        warmup: int = MEASURE_WARMUP,
                        repeat: int = MEASURE_REPEAT,
-                       calibrate_update: bool = True
+                       calibrate_update: bool = True,
+                       policy: Optional[resilience.Policy] = None,
+                       cache: Union[None, bool, str, TuningCache] = False
                        ) -> List[CandidateTiming]:
     """Hybrid step as a library call: analytic shortlist, lower + time
     the top-k, optionally fold the samples into the device calibration
     profile.  ``benchmarks/run.py --measure`` builds its analytic-vs-
     measured rank-correlation table from exactly these records.
+
+    ``policy`` bounds each lower+time with a deadline and transient
+    retry; ``cache`` (default off for the library call) enables the
+    persistent candidate quarantine shared with ``explore``.
     """
     cands, _, _, _ = shortlist(p, vmem_budget=vmem_budget, align=align,
                                space=space, max_points=max_points,
@@ -685,7 +765,8 @@ def measured_shortlist(p: ir.Pattern, *,
                                                       max(top_k, 1)),
                                vmem_budget=vmem_budget, align=align,
                                timing_db=timing_db, warmup=warmup,
-                               repeat=repeat)
+                               repeat=repeat, policy=policy,
+                               cache=_resolve_cache(cache))
     if calibrate_update:
         _observe(type(p).__name__, _workload_tag(p), timings)
     return timings
@@ -703,7 +784,8 @@ def explore(p: ir.Pattern, *,
             profile=None,
             warmup: int = MEASURE_WARMUP,
             repeat: int = MEASURE_REPEAT,
-            depths: Tuple[int, ...] = DEPTHS) -> TilePlan:
+            depths: Tuple[int, ...] = DEPTHS,
+            policy: Optional[resilience.Policy] = None) -> TilePlan:
     """Design-space exploration over tile sizes AND metapipeline buffer
     depths for any pattern program.
 
@@ -728,6 +810,16 @@ def explore(p: ir.Pattern, *,
     device-keyed ``timing_db``), the measured argmin wins, and the
     samples recalibrate the device profile before the plan is cached --
     so a second call is a pure cache hit: zero lowering, zero execution.
+
+    The measured path is fault-tolerant (``core.resilience``): each
+    lower+time runs under ``policy``'s deadline with transient retry,
+    failing candidates are quarantined in the tuning cache (never
+    re-attempted), and the measured winner is *certified* against the
+    ``codegen_jax`` oracle before promotion -- a winner that times well
+    but computes wrong numbers is quarantined and the next-fastest
+    certified candidate wins instead.  When every measured candidate
+    fails, the analytic argmin ships (recorded as a fallback event);
+    ``explore`` never raises for a candidate-level failure.
     """
     measure = _measure_mode(measure)
     tc = _resolve_cache(cache)
@@ -768,22 +860,52 @@ def explore(p: ir.Pattern, *,
     timed_n = 0
     best = cands[0]
     if measure == "top_k":
+        pol = resilience.resolve_policy(policy)
         timings = _time_candidates(p, _top_distinct_sizes(cands,
                                                           max(top_k, 1)),
                                    vmem_budget=vmem_budget, align=align,
                                    timing_db=timing_db, warmup=warmup,
-                                   repeat=repeat)
+                                   repeat=repeat, policy=pol, cache=tc)
         _observe(type(p).__name__, _workload_tag(p), timings)
-        if timings:
-            win = min(timings,
-                      key=lambda t: (t.measurement.median_s,
-                                     t.traffic_words, t.depth,
-                                     -t.vmem_bytes))
+        ranked = sorted(timings,
+                        key=lambda t: (t.measurement.median_s,
+                                       t.traffic_words, t.depth,
+                                       -t.vmem_bytes))
+        for win in ranked:
+            if pol.certify:
+                sig = tuple(sorted((k, tuple(v))
+                                   for k, v in win.sizes.items()))
+                ckey = "certify|" + measure_mod.TimingDB.full_key(
+                    pattern_key(p, vmem_budget=vmem_budget, align=align,
+                                extra=("certify", sig),
+                                device="", profile_hash=""))
+                if tc is not None and tc.quarantined(ckey) is not None:
+                    continue  # failed certification in a past run
+                ok, reason = resilience.certify_guarded(
+                    lambda w=win: resilience.certify_tile_plan(
+                        p, w.sizes, vmem_budget=vmem_budget),
+                    key=ckey, policy=pol)
+                if not ok:
+                    resilience.record("certify", "certify-failed",
+                                      ckey, "quarantined", reason)
+                    if tc is not None:
+                        tc.quarantine(ckey, "certify-failed", reason)
+                    continue
             best = Priced(win.sizes, win.traffic_words, win.vmem_bytes,
                           win.analytic_seconds, win.calibrated_seconds,
                           win.steps, depth=win.depth)
             measured_s = win.measurement.median_s
             timed_n = len(timings)
+            break
+        else:
+            # every shortlisted candidate failed timing or
+            # certification: the analytic argmin ships, uncertified
+            # measured data never does
+            resilience.record(
+                "explore", "no-measured-winner", _workload_tag(p),
+                "fallback",
+                f"{len(timings)} timed, 0 certified; analytic argmin "
+                "promoted instead")
 
     plan = TilePlan(sizes={k: tuple(v) for k, v in best.sizes.items()},
                     depths={k: int(best.depth) for k in best.sizes},
@@ -1008,18 +1130,23 @@ class PipelineTiming:
 
 def _time_pipeline_candidates(pipe, priced: List[Tuple], *,
                               vmem_budget: int, align: int,
-                              timing_db, warmup: int, repeat: int
+                              timing_db, warmup: int, repeat: int,
+                              policy: Optional[resilience.Policy] = None,
+                              cache: Optional[TuningCache] = None
                               ) -> List[PipelineTiming]:
     """Lower + time whole fused-pipeline candidates (each a fully fused
     single-group ``PipelinePlan`` at one (block, depth) point).  Unlike
     the single-pattern path, depth IS part of the timing key: the
     megakernel's rotating stage scratch is allocated depth-deep, so
-    depth variants are genuinely different executables."""
+    depth variants are genuinely different executables.  Same failure
+    discipline as ``_time_candidates``: deadline + retry + quarantine,
+    never a crash of the exploration."""
     from . import pipeline as plmod
     from .codegen_pallas import lower_pipeline_for_timing
 
     n_stages = len(plmod.topo_stages(pipe))
     unfused = plmod.unfused_traffic_words(pipe)
+    pol = resilience.resolve_policy(policy)
     out: List[PipelineTiming] = []
     for (b, d), (words, vmem, s_ana, s_cal, steps) in priced:
         variant = PipelinePlan(
@@ -1031,16 +1158,30 @@ def _time_pipeline_candidates(pipe, priced: List[Tuple], *,
         key = pipeline_key(pipe, vmem_budget=vmem_budget, align=align,
                            extra=("timing", int(b), int(d)),
                            device="", profile_hash="")
+        qkey = "time|" + measure_mod.TimingDB.full_key(key)
+        if cache is not None:
+            q = cache.quarantined(qkey)
+            if q is not None:
+                resilience.record_once(
+                    "time", q.get("kind", "unknown"), qkey, "skipped",
+                    "previously quarantined candidate not re-attempted")
+                continue
 
         def make_fn(variant=variant):
             return lower_pipeline_for_timing(pipe, variant,
                                              vmem_budget=vmem_budget)
 
         try:
-            m = measure_mod.timed(key, make_fn, db=timing_db,
-                                  warmup=warmup, repeat=repeat)
-        except Exception:
-            continue  # candidate not executable on this backend
+            m = resilience.call_guarded(
+                lambda: measure_mod.timed(key, make_fn, db=timing_db,
+                                          warmup=warmup, repeat=repeat),
+                stage="time", key=qkey, policy=pol)
+        except resilience.CandidateFailure as e:
+            resilience.record("time", e.kind, qkey, "quarantined",
+                              e.detail)
+            if cache is not None:
+                cache.quarantine(qkey, e.kind, e.detail)
+            continue
         out.append(PipelineTiming(
             block=int(b), traffic_words=int(words), vmem_bytes=int(vmem),
             analytic_seconds=s_ana, calibrated_seconds=s_cal,
@@ -1099,14 +1240,20 @@ def measured_pipeline_shortlist(pipe, *,
                                 repeat: int = MEASURE_REPEAT,
                                 calibrate_update: bool = True,
                                 priced: Optional[List[Tuple]] = None,
-                                depths: Tuple[int, ...] = DEPTHS
+                                depths: Tuple[int, ...] = DEPTHS,
+                                policy: Optional[resilience.Policy]
+                                = None,
+                                cache: Union[None, bool, str,
+                                             TuningCache] = False
                                 ) -> List[PipelineTiming]:
     """Hybrid step for a pipeline DAG: analytically shortlist fully
     fused (block, depth) candidates, lower the top-k whole megakernels
     (depth-deep rotating stage scratch included), time them, optionally
     fold the samples into the calibration profile.  ``priced`` reuses
     an already-computed shortlist (``explore_pipeline`` passes its DP's
-    whole-range pricing) instead of re-pricing."""
+    whole-range pricing) instead of re-pricing.  ``policy``/``cache``
+    mirror ``measured_shortlist``: deadline + retry per candidate,
+    persistent quarantine when a cache is given."""
     if priced is None:
         priced = _price_whole_pipeline(
             pipe, vmem_budget=vmem_budget, align=align,
@@ -1114,7 +1261,8 @@ def measured_pipeline_shortlist(pipe, *,
             counters={"explored": 0, "pruned": 0}, depths=depths)
     timings = _time_pipeline_candidates(
         pipe, priced[:max(top_k, 1)], vmem_budget=vmem_budget,
-        align=align, timing_db=timing_db, warmup=warmup, repeat=repeat)
+        align=align, timing_db=timing_db, warmup=warmup, repeat=repeat,
+        policy=policy, cache=_resolve_cache(cache))
     if calibrate_update:
         _observe_pipeline(pipe, timings)
     return timings
@@ -1131,7 +1279,9 @@ def explore_pipeline(pipe, *,
                      profile=None,
                      warmup: int = MEASURE_WARMUP,
                      repeat: int = MEASURE_REPEAT,
-                     depths: Tuple[int, ...] = DEPTHS) -> PipelinePlan:
+                     depths: Tuple[int, ...] = DEPTHS,
+                     policy: Optional[resilience.Policy] = None
+                     ) -> PipelinePlan:
     """Joint design-space exploration for a pattern pipeline DAG.
 
     One tile candidate set is enumerated for the shared streaming
@@ -1160,6 +1310,13 @@ def explore_pipeline(pipe, *,
     A split-fallback winner keeps the analytic choice (its groups
     execute as separate kernels; timing them jointly would conflate
     the cut traffic with tile effects).
+
+    Measured candidates run under ``policy`` (deadline, transient
+    retry), failures are quarantined in the tuning cache, and the
+    measured winner must *certify* against the unfused per-stage
+    oracle (``pipeline.run_unfused``) before promotion; when no
+    candidate survives, the analytic plan ships and a fallback event
+    is recorded -- candidate-level failures never raise.
     """
     from . import pipeline as plmod  # local import: keep layering thin
 
@@ -1266,6 +1423,7 @@ def explore_pipeline(pipe, *,
         depths=best[5])
 
     if measure == "top_k" and plan.fused:
+        pol = resilience.resolve_policy(policy)
         # the resolved profile (prof=None means "uncalibrated", whether
         # from an explicit False or from no profile on disk) must not
         # re-resolve back to the on-disk profile downstream
@@ -1274,12 +1432,32 @@ def explore_pipeline(pipe, *,
             max_points=max_points,
             profile=prof if prof is not None else False,
             timing_db=timing_db, warmup=warmup, repeat=repeat,
-            priced=priced_whole, depths=depths)
-        if timings:
-            win = min(timings,
-                      key=lambda t: (t.measurement.median_s,
-                                     t.traffic_words, t.depth,
-                                     -t.vmem_bytes))
+            priced=priced_whole, depths=depths, policy=pol,
+            cache=tc if tc is not None else False)
+        ranked = sorted(timings,
+                        key=lambda t: (t.measurement.median_s,
+                                       t.traffic_words, t.depth,
+                                       -t.vmem_bytes))
+        promoted = False
+        for win in ranked:
+            if pol.certify:
+                ckey = "certify|" + measure_mod.TimingDB.full_key(
+                    pipeline_key(pipe, vmem_budget=vmem_budget,
+                                 align=align,
+                                 extra=("certify", win.block, win.depth),
+                                 device="", profile_hash=""))
+                if tc is not None and tc.quarantined(ckey) is not None:
+                    continue  # failed certification in a past run
+                ok, reason = resilience.certify_guarded(
+                    lambda w=win: resilience.certify_pipeline_plan(
+                        pipe, w.plan, vmem_budget=vmem_budget),
+                    key=ckey, policy=pol)
+                if not ok:
+                    resilience.record("certify", "certify-failed",
+                                      ckey, "quarantined", reason)
+                    if tc is not None:
+                        tc.quarantine(ckey, "certify-failed", reason)
+                    continue
             plan = dataclasses.replace(
                 win.plan,
                 unfused_traffic_words=plan.unfused_traffic_words,
@@ -1287,6 +1465,15 @@ def explore_pipeline(pipe, *,
                 measured=True,
                 measured_seconds=win.measurement.median_s,
                 timed=len(timings))
+            promoted = True
+            break
+        if not promoted:
+            resilience.record(
+                "explore", "no-measured-winner",
+                f"Pipeline:{pipe.name}:{pipe.shared_extent}",
+                "fallback",
+                f"{len(timings)} timed, 0 certified; analytic plan "
+                "promoted instead")
 
     if tc is not None:
         # key recomputed AFTER any calibration update: the next call
@@ -1399,10 +1586,12 @@ def _one(plan: TilePlan, name: str) -> Tuple[int, ...]:
 def select_gemm_blocks(m: int, n: int, k: int, *,
                        vmem_budget: int = VMEM_BYTES, align: int = MXU,
                        cache: Union[None, bool, str, TuningCache] = None,
-                       measure: Optional[str] = None
+                       measure: Optional[str] = None,
+                       policy: Optional[resilience.Policy] = None
                        ) -> Tuple[Tuple[int, int, int], TilePlan]:
     plan = explore(gemm_program(m, n, k), vmem_budget=vmem_budget,
-                   align=align, cache=cache, measure=measure)
+                   align=align, cache=cache, measure=measure,
+                   policy=policy)
     (bm, bn), (bk,) = _one(plan, "gemm"), _one(plan, "gemm_k")
     return (bm, bn, bk), plan
 
@@ -1410,10 +1599,12 @@ def select_gemm_blocks(m: int, n: int, k: int, *,
 def select_attention_blocks(sq: int, sk: int, d: int, *,
                             vmem_budget: int = VMEM_BYTES, align: int = MXU,
                             cache: Union[None, bool, str, TuningCache] = None,
-                            measure: Optional[str] = None
+                            measure: Optional[str] = None,
+                            policy: Optional[resilience.Policy] = None
                             ) -> Tuple[Tuple[int, int], TilePlan]:
     plan = explore(attention_program(sq, sk, d), vmem_budget=vmem_budget,
-                   align=align, cache=cache, measure=measure)
+                   align=align, cache=cache, measure=measure,
+                   policy=policy)
     (bq,), (bk,) = _one(plan, "fa_q"), _one(plan, "fa_kv")
     return (bq, bk), plan
 
@@ -1421,10 +1612,12 @@ def select_attention_blocks(sq: int, sk: int, d: int, *,
 def select_scan_blocks(seq: int, n: int, dh: int, *,
                        vmem_budget: int = VMEM_BYTES, align: int = MXU,
                        cache: Union[None, bool, str, TuningCache] = None,
-                       measure: Optional[str] = None
+                       measure: Optional[str] = None,
+                       policy: Optional[resilience.Policy] = None
                        ) -> Tuple[int, TilePlan]:
     plan = explore(scan_program(seq, n, dh), vmem_budget=vmem_budget,
-                   align=align, cache=cache, measure=measure)
+                   align=align, cache=cache, measure=measure,
+                   policy=policy)
     (chunk,) = _one(plan, "ssd")
     return chunk, plan
 
@@ -1434,10 +1627,13 @@ def select_filter_reduce_blocks(t: int, *,
                                 align: int = MXU,
                                 cache: Union[None, bool, str,
                                              TuningCache] = None,
-                                measure: Optional[str] = None
+                                measure: Optional[str] = None,
+                                policy: Optional[resilience.Policy]
+                                = None
                                 ) -> Tuple[int, TilePlan]:
     plan = explore(filter_reduce_program(t), vmem_budget=vmem_budget,
-                   align=align, cache=cache, measure=measure)
+                   align=align, cache=cache, measure=measure,
+                   policy=policy)
     (bt,) = _one(plan, "fr")
     return bt, plan
 
@@ -1445,11 +1641,12 @@ def select_filter_reduce_blocks(t: int, *,
 def select_groupby_blocks(t: int, num_keys: int, ew: int, *,
                           vmem_budget: int = VMEM_BYTES, align: int = MXU,
                           cache: Union[None, bool, str, TuningCache] = None,
-                          measure: Optional[str] = None
+                          measure: Optional[str] = None,
+                          policy: Optional[resilience.Policy] = None
                           ) -> Tuple[int, TilePlan]:
     plan = explore(groupby_program(t, num_keys, ew),
                    vmem_budget=vmem_budget, align=align, cache=cache,
-                   measure=measure)
+                   measure=measure, policy=policy)
     (bt,) = _one(plan, "gbf")
     return bt, plan
 
@@ -1480,12 +1677,13 @@ def filter_fold_pipeline(t: int):
 def select_fused_filter_fold_blocks(
         t: int, *, vmem_budget: int = VMEM_BYTES, align: int = MXU,
         cache: Union[None, bool, str, TuningCache] = None,
-        measure: Optional[str] = None
+        measure: Optional[str] = None,
+        policy: Optional[resilience.Policy] = None
         ) -> Tuple[int, PipelinePlan]:
     """Joint-DSE streaming tile for the fused filter+fold megakernel."""
     plan = explore_pipeline(filter_fold_pipeline(t),
                             vmem_budget=vmem_budget, align=align,
-                            cache=cache, measure=measure)
+                            cache=cache, measure=measure, policy=policy)
     return plan.block, plan
 
 
@@ -1493,7 +1691,8 @@ def select_fused_kmeans_blocks(
         n: int, k: int, d: int, *, vmem_budget: int = VMEM_BYTES,
         align: int = MXU,
         cache: Union[None, bool, str, TuningCache] = None,
-        measure: Optional[str] = None
+        measure: Optional[str] = None,
+        policy: Optional[resilience.Policy] = None
         ) -> Tuple[int, PipelinePlan]:
     """Joint-DSE streaming tile for the fused k-means DAG megakernel
     (assign -> {scatter-sum, count}; one plan for the whole DAG, cached
@@ -1501,5 +1700,5 @@ def select_fused_kmeans_blocks(
     from repro.patterns.analytics import kmeans_pipeline
     pipe, _, _ = kmeans_pipeline(n, k, d)
     plan = explore_pipeline(pipe, vmem_budget=vmem_budget, align=align,
-                            cache=cache, measure=measure)
+                            cache=cache, measure=measure, policy=policy)
     return plan.block, plan

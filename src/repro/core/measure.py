@@ -25,16 +25,14 @@ masquerade as compiled-TPU medians after a device change.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import statistics
-import tempfile
 import time
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import ir
+from . import ir, resilience
 
 
 # --------------------------------------------------------------------------
@@ -119,6 +117,9 @@ def measure(fn: Callable[[], object], *, warmup: int = 1,
         raise ValueError(f"repeat must be >= 1, got {repeat}")
     if warmup < 0:
         raise ValueError(f"warmup must be >= 0, got {warmup}")
+    # chaos hook: REPRO_FAULTS=time:<p> makes this measurement fail
+    # deterministically so the quarantine path can be exercised
+    resilience.inject("time", "measure.measure")
     for _ in range(warmup):
         jax.block_until_ready(fn())
     times = []
@@ -156,21 +157,9 @@ def cache_sibling_path(name: str,
     return os.path.join(base, "repro", name)
 
 
-def atomic_write_json(path: str, doc, *, prefix: str = ".tmp.",
-                      indent: int = 0) -> None:
-    """mkstemp + rename JSON write shared by the persistent stores.
-    An ``OSError`` (read-only FS etc.) is swallowed: every store is an
-    accelerator whose callers keep their in-memory copy, never a
-    correctness dependency."""
-    try:
-        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
-                                   prefix=prefix)
-        with os.fdopen(fd, "w") as f:
-            json.dump(doc, f, indent=indent, sort_keys=True)
-        os.replace(tmp, path)
-    except OSError:
-        pass
+# atomic JSON write, re-exported for back-compat (the crash-safe
+# store layer in ``core.resilience`` owns the implementation now)
+atomic_write_json = resilience.atomic_write_json
 
 
 def default_db_path() -> str:
@@ -180,10 +169,12 @@ def default_db_path() -> str:
 class TimingDB:
     """On-disk measurement store keyed by (device, interpret, key).
 
-    Same contract as the DSE ``TuningCache``: JSON document, atomic
-    rewrite on put, and a corrupt or unreadable file reads as empty --
-    the DB accelerates re-exploration, it is never a correctness
-    dependency.
+    Same contract as the DSE ``TuningCache``: crash-safe checksummed
+    JSON (``resilience.load_store``: a truncated or corrupt file is
+    quarantined to ``<path>.corrupt`` with a warning and the DB
+    rebuilds fresh), lock-protected read-modify-write on put, and the
+    DB only ever accelerates re-exploration -- it is never a
+    correctness dependency.
     """
 
     def __init__(self, path: Optional[str] = None):
@@ -199,13 +190,8 @@ class TimingDB:
 
     def _load(self) -> Dict[str, Dict]:
         if self._data is None:
-            try:
-                with open(self.path) as f:
-                    self._data = json.load(f)
-                if not isinstance(self._data, dict):
-                    self._data = {}
-            except (OSError, ValueError):
-                self._data = {}
+            self._data = resilience.load_store(self.path,
+                                               label="timing DB")
         return self._data
 
     def get(self, key: str) -> Optional[Measurement]:
@@ -218,9 +204,17 @@ class TimingDB:
             return None
 
     def put(self, key: str, m: Measurement) -> None:
-        data = self._load()
-        data[self.full_key(key)] = m.to_json()
-        atomic_write_json(self.path, data, prefix=".timing_db.")
+        mine = self._load()
+        mine[self.full_key(key)] = m.to_json()
+
+        def merge(data: Dict) -> None:
+            data[self.full_key(key)] = m.to_json()
+
+        # locked read-modify-write: a concurrent process's entries
+        # survive this put (and land in our in-memory view)
+        self._data = resilience.locked_update(
+            self.path, merge, label="timing DB", prefix=".timing_db.")
+        self._data.update(mine)
 
     def clear(self) -> None:
         self._data = {}

@@ -524,17 +524,20 @@ def sub_pipeline(pipe: Pipeline, i0: int, i1: int) -> Pipeline:
 
 def lower_pipeline(pipe: Pipeline, *, fused: bool = True, plan=None,
                    vmem_budget: Optional[int] = None,
-                   cache=None) -> Callable:
+                   cache=None, measure=None, policy=None) -> Callable:
     """Lower a pipeline to an executable callable.
 
     ``fused=True`` (default) runs joint DSE and emits the single-kernel
     Pallas lowering (``codegen_pallas.lower_fused_pipeline``);
     ``fused=False`` returns the per-stage oracle DAG -- the pre-fusion
     semantics every fused kernel is validated against.  Multi-output
-    pipelines return a name -> array dict either way.
+    pipelines return a name -> array dict either way.  ``measure`` and
+    ``policy`` (a ``resilience.Policy``) pass through to the joint DSE:
+    measured mode, per-candidate deadlines, quarantine, certification.
     """
     if not fused:
         return unfused_runner(pipe)
     from .codegen_pallas import lower_fused_pipeline
     return lower_fused_pipeline(pipe, plan=plan, vmem_budget=vmem_budget,
-                                cache=cache)
+                                cache=cache, measure=measure,
+                                policy=policy)

@@ -36,14 +36,15 @@ def select_gemm_tiles(m: int, n: int, k: int, *,
                       vmem_budget: int = VMEM_BYTES,
                       align: int = MXU,
                       cache: Union[None, bool, str, TuningCache] = None,
-                      measure: Union[None, str] = None
-                      ) -> TileChoice:
+                      measure: Union[None, str] = None,
+                      policy=None) -> TileChoice:
     """DSE over (bm, bn, bk): minimize modeled HBM traffic of the tiled
     IR subject to the VMEM budget (delegates to ``core.dse.explore``;
-    ``measure="top_k"`` backs the choice with real timings)."""
+    ``measure="top_k"`` backs the choice with real timings; ``policy``
+    bounds the measured exploration)."""
     (bm, bn, bk), plan = select_gemm_blocks(
         m, n, k, vmem_budget=vmem_budget, align=align, cache=cache,
-        measure=measure)
+        measure=measure, policy=policy)
     return TileChoice(bm, bn, bk, plan.traffic_words, plan.vmem_bytes)
 
 

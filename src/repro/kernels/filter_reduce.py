@@ -19,9 +19,11 @@ INTERPRET = True
 
 
 @functools.lru_cache(maxsize=None)
-def _auto_blocks(t: int, measure: Optional[str] = None) -> int:
+def _auto_blocks(t: int, measure: Optional[str] = None,
+                 policy=None) -> int:
     from repro.core.dse import select_filter_reduce_blocks
-    bt, _ = select_filter_reduce_blocks(t, measure=measure)
+    bt, _ = select_filter_reduce_blocks(t, measure=measure,
+                                        policy=policy)
     return bt
 
 
@@ -40,14 +42,15 @@ def _fr_kernel(x_ref, w_ref, lo_ref, hi_ref, o_ref):
 
 def filter_reduce(x: jax.Array, weight: jax.Array, lo, hi, *,
                   block_t: int = 1024, auto_tile: bool = False,
-                  measure: Optional[str] = None,
+                  measure: Optional[str] = None, policy=None,
                   interpret: Optional[bool] = None) -> jax.Array:
     """``auto_tile=True`` picks block_t by DSE on the fused filter+fold
     proxy (``repro.core.dse.filter_reduce_program``); ``measure="top_k"``
-    backs the choice with real timings (hybrid DSE)."""
+    backs the choice with real timings (hybrid DSE); ``policy`` (a
+    ``core.resilience.Policy``) bounds the measured exploration."""
     (t,) = x.shape
     if auto_tile:
-        block_t = _auto_blocks(t, measure)
+        block_t = _auto_blocks(t, measure, policy)
     block_t = min(block_t, t)
     assert t % block_t == 0
     lo = jnp.asarray([lo], jnp.float32)

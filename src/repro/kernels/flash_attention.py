@@ -26,9 +26,10 @@ NEG_INF = -1e30
 
 @functools.lru_cache(maxsize=None)
 def _auto_blocks(sq: int, sk: int, d: int,
-                 measure: Optional[str] = None) -> tuple:
+                 measure: Optional[str] = None, policy=None) -> tuple:
     from repro.core.dse import select_attention_blocks
-    blocks, _ = select_attention_blocks(sq, sk, d, measure=measure)
+    blocks, _ = select_attention_blocks(sq, sk, d, measure=measure,
+                                        policy=policy)
     return blocks
 
 
@@ -78,14 +79,15 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: Optional[float] = None,
                     block_q: int = 128, block_k: int = 128,
                     auto_tile: bool = False,
-                    measure: Optional[str] = None,
+                    measure: Optional[str] = None, policy=None,
                     interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
 
     GQA: the q-head group dim is folded into the grid so each kv head's
     K/V tiles are loaded once per group member (reuse via grid order).
     ``auto_tile=True`` picks (block_q, block_k) by DSE on the attention
-    proxy program (``repro.core.dse.attention_program``).
+    proxy program (``repro.core.dse.attention_program``); ``policy``
+    (a ``core.resilience.Policy``) bounds any measured exploration.
     """
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
@@ -93,7 +95,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     group = hq // hkv
     scale = scale if scale is not None else d ** -0.5
     if auto_tile:
-        block_q, block_k = _auto_blocks(sq, sk, d, measure)
+        block_q, block_k = _auto_blocks(sq, sk, d, measure, policy)
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     assert sq % block_q == 0 and sk % block_k == 0

@@ -23,9 +23,11 @@ INTERPRET = True
 
 
 @functools.lru_cache(maxsize=None)
-def _auto_blocks(t: int, measure: Optional[str] = None) -> int:
+def _auto_blocks(t: int, measure: Optional[str] = None,
+                 policy=None) -> int:
     from repro.core.dse import select_fused_filter_fold_blocks
-    bt, _ = select_fused_filter_fold_blocks(t, measure=measure)
+    bt, _ = select_fused_filter_fold_blocks(t, measure=measure,
+                                            policy=policy)
     return bt
 
 
@@ -48,16 +50,19 @@ def _ff_kernel(x_ref, w_ref, lo_ref, hi_ref, o_ref, mask_ref):
 def fused_filter_fold(x: jax.Array, weight: jax.Array, lo, hi, *,
                       block_t: int = 1024, auto_tile: bool = False,
                       measure: Optional[str] = None,
+                      policy=None,
                       interpret: Optional[bool] = None) -> jax.Array:
     """``sum(where(lo <= x < hi, x * weight, 0))`` as a fused two-stage
     megakernel.  ``auto_tile=True`` picks ``block_t`` by *joint* DSE on
     the filter+fold pipeline (``core.dse.select_fused_filter_fold_blocks``
     -- one plan for the whole chain, cached on the pipeline signature);
-    ``measure="top_k"`` backs it with real timings (hybrid DSE).
+    ``measure="top_k"`` backs it with real timings (hybrid DSE), and
+    ``policy`` (a ``core.resilience.Policy``) bounds that measured
+    exploration with deadlines, quarantine and plan certification.
     """
     (t,) = x.shape
     if auto_tile:
-        block_t = _auto_blocks(t, measure)
+        block_t = _auto_blocks(t, measure, policy)
     block_t = min(block_t, t)
     assert t % block_t == 0
     lo = jnp.asarray([lo], jnp.float32)

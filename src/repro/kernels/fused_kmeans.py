@@ -30,9 +30,10 @@ INTERPRET = True
 
 @functools.lru_cache(maxsize=None)
 def _auto_blocks(n: int, k: int, d: int,
-                 measure: Optional[str] = None) -> int:
+                 measure: Optional[str] = None, policy=None) -> int:
     from repro.core.dse import select_fused_kmeans_blocks
-    bn, _ = select_fused_kmeans_blocks(n, k, d, measure=measure)
+    bn, _ = select_fused_kmeans_blocks(n, k, d, measure=measure,
+                                       policy=policy)
     return bn
 
 
@@ -60,7 +61,7 @@ def _km_kernel(pts_ref, cents_ref, sums_ref, counts_ref, assign_ref):
 
 def fused_kmeans_step(points: jax.Array, centroids: jax.Array, *,
                       block_n: int = 128, auto_tile: bool = False,
-                      measure: Optional[str] = None,
+                      measure: Optional[str] = None, policy=None,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array]:
     """One k-means update step as a single two-output megakernel:
@@ -68,12 +69,14 @@ def fused_kmeans_step(points: jax.Array, centroids: jax.Array, *,
     to centroid k`` and ``counts[k]`` their number.  ``auto_tile=True``
     picks ``block_n`` by joint DSE on the assign -> {sum, count} DAG
     (``core.dse.select_fused_kmeans_blocks`` -- one plan for the whole
-    DAG, cached on its topological signature)."""
+    DAG, cached on its topological signature); ``policy`` (a
+    ``core.resilience.Policy``) bounds any measured exploration with
+    deadlines, quarantine and plan certification."""
     n, d = points.shape
     k, d2 = centroids.shape
     assert d == d2, (points.shape, centroids.shape)
     if auto_tile:
-        block_n = _auto_blocks(n, k, d, measure)
+        block_n = _auto_blocks(n, k, d, measure, policy)
     block_n = min(block_n, n)
     assert n % block_n == 0
     sums, counts = pl.pallas_call(

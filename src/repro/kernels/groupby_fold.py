@@ -20,9 +20,10 @@ INTERPRET = True
 
 @functools.lru_cache(maxsize=None)
 def _auto_blocks(t: int, num_keys: int, ew: int,
-                 measure: Optional[str] = None) -> int:
+                 measure: Optional[str] = None, policy=None) -> int:
     from repro.core.dse import select_groupby_blocks
-    bt, _ = select_groupby_blocks(t, num_keys, ew, measure=measure)
+    bt, _ = select_groupby_blocks(t, num_keys, ew, measure=measure,
+                                  policy=policy)
     return bt
 
 
@@ -41,20 +42,21 @@ def _gbf_kernel(k_ref, v_ref, o_ref, *, num_keys: int):
 
 def groupby_fold(keys: jax.Array, values: jax.Array, num_keys: int, *,
                  block_t: int = 256, auto_tile: bool = False,
-                 measure: Optional[str] = None,
+                 measure: Optional[str] = None, policy=None,
                  interpret: Optional[bool] = None) -> jax.Array:
     """out[k] = sum over i with keys[i]==k of values[i].
 
     keys: (T,) int32; values: (T,) or (T, E) -> out (num_keys, E).
     ``auto_tile=True`` picks block_t by DSE on the keyed-fold proxy
     (``repro.core.dse.groupby_program``); ``measure="top_k"`` backs the
-    choice with real timings (hybrid DSE)."""
+    choice with real timings (hybrid DSE); ``policy`` (a
+    ``core.resilience.Policy``) bounds the measured exploration."""
     squeeze = values.ndim == 1
     if squeeze:
         values = values[:, None]
     t, ew = values.shape
     if auto_tile:
-        block_t = _auto_blocks(t, num_keys, ew, measure)
+        block_t = _auto_blocks(t, num_keys, ew, measure, policy)
     block_t = min(block_t, t)
     assert t % block_t == 0
     out = pl.pallas_call(

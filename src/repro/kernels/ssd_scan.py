@@ -25,9 +25,10 @@ INTERPRET = True
 
 @functools.lru_cache(maxsize=None)
 def _auto_blocks(seq: int, n: int, dh: int,
-                 measure: Optional[str] = None) -> int:
+                 measure: Optional[str] = None, policy=None) -> int:
     from repro.core.dse import select_scan_blocks
-    chunk, _ = select_scan_blocks(seq, n, dh, measure=measure)
+    chunk, _ = select_scan_blocks(seq, n, dh, measure=measure,
+                                  policy=policy)
     return chunk
 
 
@@ -69,16 +70,17 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
 
 def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
              C: jax.Array, *, chunk: int = 128, auto_tile: bool = False,
-             measure: Optional[str] = None,
+             measure: Optional[str] = None, policy=None,
              interpret: Optional[bool] = None) -> jax.Array:
     """See ref.ssd_scan for semantics.  seq must divide ``chunk``.
 
     ``auto_tile=True`` picks the chunk length by DSE on the sequence-fold
-    proxy (``repro.core.dse.scan_program``)."""
+    proxy (``repro.core.dse.scan_program``); ``policy`` (a
+    ``core.resilience.Policy``) bounds any measured exploration."""
     bsz, seq, h, dh = x.shape
     n = B.shape[-1]
     if auto_tile:
-        chunk = _auto_blocks(seq, n, dh, measure)
+        chunk = _auto_blocks(seq, n, dh, measure, policy)
     chunk = min(chunk, seq)
     assert seq % chunk == 0, (seq, chunk)
     nc = seq // chunk

@@ -12,3 +12,10 @@ def _isolated_dse_cache(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_CALIB_PROFILE",
                        str(tmp_path / "calibration.json"))
     monkeypatch.delenv("REPRO_MEASURE", raising=False)
+    # ambient resilience state must not leak into tests: no injected
+    # faults, default policy knobs, and a fresh failure-event log
+    for var in ("REPRO_FAULTS", "REPRO_FAULTS_SEED", "REPRO_TIMEOUT_S",
+                "REPRO_RETRIES", "REPRO_BACKOFF_S", "REPRO_CERTIFY"):
+        monkeypatch.delenv(var, raising=False)
+    from repro.core import resilience
+    resilience.LOG.reset()

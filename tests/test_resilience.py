@@ -1,0 +1,499 @@
+"""Fault-tolerant tuning runtime (``core.resilience``).
+
+Covers the failure taxonomy, deterministic fault injection, deadlines
+and guarded retry, the crash-safe persistent stores (corruption ->
+``<path>.corrupt`` quarantine, checksum verification, version skew,
+legacy format), candidate quarantine in the DSE tuning cache, plan
+certification gating, and the headline robustness property: a fully
+fault-injected measured exploration still returns a valid analytic
+plan -- and never hangs, raises, or caches an uncertified winner.
+"""
+import json
+import os
+import time
+
+import pytest
+
+from repro.core import calibrate, dse, resilience
+from repro.core import measure as measure_mod
+
+
+# --------------------------------------------------------------------------
+# Failure taxonomy
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("exc,kind", [
+    (resilience.DeadlineExceeded("slow"), "timeout"),
+    (NotImplementedError("no template"), "lower-unsupported"),
+    (ValueError("bad shape"), "lower-error"),
+    (TypeError("bad arg"), "lower-error"),
+    (KeyError("missing"), "lower-error"),
+    (IndexError("oob"), "lower-error"),
+    (ZeroDivisionError("div"), "numeric-error"),
+    (OSError("io blip"), "transient"),
+    (MemoryError(), "transient"),
+    (RuntimeError("xla: internal"), "compile-error"),
+])
+def test_classify_taxonomy(exc, kind):
+    assert resilience.classify(exc) == kind
+
+
+def test_classify_injected_and_unexpected():
+    fault = resilience.InjectedFault("lower", "candidate 3")
+    assert resilience.classify(fault) == "injected:lower"
+    # a real bug (AttributeError etc.) is never an expected kind
+    assert resilience.classify(AttributeError("bug")) \
+        == "unexpected:AttributeError"
+    assert not isinstance(AttributeError("bug"),
+                          resilience.EXPECTED_ERRORS)
+
+
+def test_timeout_classified_before_transient():
+    # DeadlineExceeded IS a TimeoutError IS an OSError: the taxonomy
+    # must not retry a deterministic hang as a "transient" blip
+    assert isinstance(resilience.DeadlineExceeded("x"), OSError)
+    assert "timeout" not in resilience.RETRYABLE_KINDS
+
+
+# --------------------------------------------------------------------------
+# Event log
+# --------------------------------------------------------------------------
+
+
+def test_event_log_counts_and_filters():
+    resilience.record("time", "timeout", "k1", "quarantined", "slow")
+    resilience.record("lower", "lower-error", "k2", "fallback")
+    assert resilience.LOG.counts() == {"quarantined": 1, "fallback": 1}
+    assert [e.key for e in resilience.LOG.events(stage="time")] == ["k1"]
+    assert [e.key for e in resilience.LOG.events(action="fallback")] \
+        == ["k2"]
+
+
+def test_record_once_dedupes_hot_path():
+    for _ in range(5):
+        resilience.record_once("lower", "lower-unsupported", "same-key",
+                               "fallback")
+    assert len(resilience.LOG.events()) == 1
+    resilience.LOG.reset()
+    assert resilience.LOG.counts() == {}
+    # reset clears the dedup memory too
+    resilience.record_once("lower", "lower-unsupported", "same-key",
+                           "fallback")
+    assert len(resilience.LOG.events()) == 1
+
+
+# --------------------------------------------------------------------------
+# Deterministic fault injection
+# --------------------------------------------------------------------------
+
+
+def test_fault_injector_parse():
+    inj = resilience.FaultInjector.parse("lower:0.5, time:1,certify")
+    assert inj.specs == {"lower": 0.5, "time": 1.0, "certify": 1.0}
+    with pytest.raises(ValueError):
+        resilience.FaultInjector.parse("lower:2")       # p outside [0,1]
+    with pytest.raises(ValueError):
+        resilience.FaultInjector.parse(":0.5")          # empty site
+    with pytest.raises(ValueError):
+        resilience.FaultInjector.parse("lower:abc")     # not a number
+
+
+def _fault_pattern(inj, site, n=64):
+    hits = []
+    for i in range(n):
+        try:
+            inj.maybe_fail(site)
+        except resilience.InjectedFault:
+            hits.append(i)
+    return hits
+
+
+def test_fault_injector_deterministic():
+    a = resilience.FaultInjector({"lower": 0.5}, seed=7)
+    b = resilience.FaultInjector({"lower": 0.5}, seed=7)
+    pat = _fault_pattern(a, "lower")
+    assert pat == _fault_pattern(b, "lower")
+    assert 0 < len(pat) < 64  # p=0.5 over 64 draws: some, not all
+    c = resilience.FaultInjector({"lower": 0.5}, seed=8)
+    assert pat != _fault_pattern(c, "lower")
+
+
+def test_fault_injector_edge_probabilities():
+    inj = resilience.FaultInjector({"lower": 1.0, "time": 0.0})
+    assert len(_fault_pattern(inj, "lower", 8)) == 8
+    assert _fault_pattern(inj, "time", 8) == []
+    assert _fault_pattern(inj, "unlisted-site", 8) == []
+
+
+def test_ambient_injector_follows_env(monkeypatch):
+    monkeypatch.setenv("REPRO_FAULTS", "lower:1")
+    with pytest.raises(resilience.InjectedFault):
+        resilience.inject("lower", "probe")
+    monkeypatch.delenv("REPRO_FAULTS")
+    resilience.inject("lower", "probe")  # no faults configured: no-op
+
+
+# --------------------------------------------------------------------------
+# Deadlines + guarded calls
+# --------------------------------------------------------------------------
+
+
+def test_run_with_deadline_completes_and_propagates():
+    assert resilience.run_with_deadline(lambda: 41 + 1, 5.0) == 42
+    assert resilience.run_with_deadline(lambda: "inline", 0) == "inline"
+
+    def boom():
+        raise ValueError("from worker")
+
+    with pytest.raises(ValueError, match="from worker"):
+        resilience.run_with_deadline(boom, 5.0)
+
+
+def test_run_with_deadline_times_out():
+    t0 = time.monotonic()
+    with pytest.raises(resilience.DeadlineExceeded):
+        resilience.run_with_deadline(lambda: time.sleep(10), 0.2,
+                                     label="sleeper")
+    assert time.monotonic() - t0 < 5.0  # abandoned, not joined
+
+
+def test_call_guarded_retries_transient_only():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("resource blip")
+        return "ok"
+
+    pol = resilience.Policy(timeout_s=0, retries=2, backoff_s=0.0)
+    assert resilience.call_guarded(flaky, stage="time", key="k",
+                                   policy=pol) == "ok"
+    assert calls["n"] == 3
+    assert len(resilience.LOG.events(action="retried")) == 2
+
+
+def test_call_guarded_no_retry_for_deterministic_failures():
+    calls = {"n": 0}
+
+    def bad():
+        calls["n"] += 1
+        raise ValueError("template mismatch")
+
+    pol = resilience.Policy(timeout_s=0, retries=3, backoff_s=0.0)
+    with pytest.raises(resilience.CandidateFailure) as ei:
+        resilience.call_guarded(bad, stage="lower", key="k", policy=pol)
+    assert ei.value.kind == "lower-error"
+    assert calls["n"] == 1  # retrying a deterministic failure is waste
+
+
+def test_call_guarded_timeout_becomes_candidate_failure():
+    pol = resilience.Policy(timeout_s=0.2, retries=1, backoff_s=0.0)
+    with pytest.raises(resilience.CandidateFailure) as ei:
+        resilience.call_guarded(lambda: time.sleep(10), stage="time",
+                                key="k", policy=pol)
+    assert ei.value.kind == "timeout"
+
+
+def test_call_guarded_unexpected_bug_propagates():
+    def bug():
+        raise AttributeError("a real repo bug")
+
+    with pytest.raises(AttributeError):
+        resilience.call_guarded(bug, stage="lower", key="k",
+                                policy=resilience.Policy(timeout_s=0))
+
+
+def test_policy_from_env(monkeypatch):
+    monkeypatch.setenv("REPRO_TIMEOUT_S", "7.5")
+    monkeypatch.setenv("REPRO_RETRIES", "3")
+    monkeypatch.setenv("REPRO_BACKOFF_S", "0.01")
+    monkeypatch.setenv("REPRO_CERTIFY", "0")
+    pol = resilience.default_policy()
+    assert pol == resilience.Policy(timeout_s=7.5, retries=3,
+                                    backoff_s=0.01, certify=False)
+    assert resilience.resolve_policy(None) == pol
+    mine = resilience.Policy(timeout_s=1)
+    assert resilience.resolve_policy(mine) is mine
+
+
+# --------------------------------------------------------------------------
+# Crash-safe stores
+# --------------------------------------------------------------------------
+
+
+def test_store_roundtrip_and_missing(tmp_path):
+    path = str(tmp_path / "store.json")
+    assert resilience.load_store(path) == {}  # missing: silently empty
+    resilience.save_store(path, {"a": {"x": 1}})
+    assert resilience.load_store(path) == {"a": {"x": 1}}
+    doc = json.load(open(path))
+    assert doc["__meta__"]["version"] == resilience.STORE_VERSION
+    assert doc["__meta__"]["checksum"] \
+        == resilience._payload_checksum(doc["data"])
+
+
+def test_truncated_store_quarantined_with_named_warning(tmp_path):
+    path = str(tmp_path / "store.json")
+    with open(path, "w") as f:
+        f.write('{"a": {"x": 1')  # crashed mid-write
+    with pytest.warns(UserWarning) as rec:
+        assert resilience.load_store(path, label="test store") == {}
+    msgs = [str(w.message) for w in rec]
+    assert any(path in m and "invalid JSON" in m for m in msgs)
+    assert os.path.exists(path + ".corrupt")  # evidence survives
+    assert not os.path.exists(path)
+    assert open(path + ".corrupt").read() == '{"a": {"x": 1'
+    assert resilience.LOG.events(stage="store", action="rebuilt")
+
+
+def test_non_object_store_quarantined(tmp_path):
+    path = str(tmp_path / "store.json")
+    with open(path, "w") as f:
+        json.dump([1, 2, 3], f)
+    with pytest.warns(UserWarning, match="list"):
+        assert resilience.load_store(path) == {}
+    assert os.path.exists(path + ".corrupt")
+
+
+def test_checksum_mismatch_quarantined(tmp_path):
+    path = str(tmp_path / "store.json")
+    doc = {"__meta__": {"version": resilience.STORE_VERSION,
+                        "checksum": "0" * 16},
+           "data": {"a": {"x": 1}}}
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.warns(UserWarning, match="checksum mismatch"):
+        assert resilience.load_store(path) == {}
+    assert os.path.exists(path + ".corrupt")
+
+
+def test_version_skew_fresh_start_no_quarantine(tmp_path):
+    path = str(tmp_path / "store.json")
+    resilience.save_store(path, {"a": {"x": 1}}, version=999)
+    assert resilience.load_store(path) == {}
+    # the file is healthy, just from another revision: keep it in place
+    assert os.path.exists(path)
+    assert not os.path.exists(path + ".corrupt")
+    skew = resilience.LOG.events(stage="store", action="skipped")
+    assert skew and skew[0].kind == "store-version-skew"
+
+
+def test_legacy_flat_store_accepted(tmp_path):
+    path = str(tmp_path / "store.json")
+    with open(path, "w") as f:
+        json.dump({"plan-key": {"sizes": {}}}, f)  # pre-envelope format
+    assert resilience.load_store(path) == {"plan-key": {"sizes": {}}}
+
+
+def test_locked_update_merges_concurrent_keys(tmp_path):
+    path = str(tmp_path / "store.json")
+    resilience.locked_update(path, lambda d: d.__setitem__("a", 1))
+    # a second writer (fresh read of the same file) adds its own key:
+    # both survive -- last-writer-wins would have dropped "a"
+    out = resilience.locked_update(path, lambda d: d.__setitem__("b", 2))
+    assert out == {"a": 1, "b": 2}
+    assert resilience.load_store(path) == {"a": 1, "b": 2}
+
+
+def test_atomic_write_swallows_readonly_fs(tmp_path):
+    target = tmp_path / "ro"
+    target.mkdir()
+    os.chmod(target, 0o500)
+    try:
+        resilience.save_store(str(target / "s.json"), {"a": 1})  # no raise
+    finally:
+        os.chmod(target, 0o700)
+
+
+# --------------------------------------------------------------------------
+# Store corruption recovery through each consumer
+# --------------------------------------------------------------------------
+
+
+def test_tuning_cache_survives_corruption(tmp_path):
+    path = str(tmp_path / "dse_cache.json")
+    with open(path, "w") as f:
+        f.write("not json at all")
+    tc = dse.TuningCache(path)
+    with pytest.warns(UserWarning, match="DSE tuning cache"):
+        assert tc.get("anything") is None
+    assert os.path.exists(path + ".corrupt")
+    # and the rebuilt cache is writable again
+    plan = dse.TilePlan(sizes={"t": (128,)}, traffic_words=1,
+                        vmem_bytes=2, modeled_seconds=3.0)
+    tc.put("k", plan)
+    again = dse.TuningCache(path).get("k")
+    assert again is not None and again.sizes == {"t": (128,)}
+
+
+def test_timing_db_survives_corruption(tmp_path):
+    path = str(tmp_path / "timing.json")
+    with open(path, "w") as f:
+        f.write('{"half": ')
+    db = measure_mod.TimingDB(path)
+    with pytest.warns(UserWarning, match="timing"):
+        assert db.get("some-key") is None
+    assert os.path.exists(path + ".corrupt")
+    m = measure_mod.Measurement(median_s=1e-3, mean_s=1e-3, min_s=1e-3,
+                                max_s=1e-3, repeat=1, warmup=0)
+    db.put("some-key", m)
+    got = measure_mod.TimingDB(path).get("some-key")
+    assert got is not None and got.median_s == pytest.approx(1e-3)
+
+
+def test_calibration_profile_survives_corruption(tmp_path, monkeypatch):
+    path = str(tmp_path / "calib.json")
+    monkeypatch.setenv("REPRO_CALIB_PROFILE", path)
+    with open(path, "w") as f:
+        f.write("\x00\x01 garbage")
+    with pytest.warns(UserWarning, match="calibration profile"):
+        assert calibrate.load_profile(path=path) is None
+    assert os.path.exists(path + ".corrupt")
+    assert calibrate.active_profile_hash(path=path) == "uncalibrated"
+
+
+# --------------------------------------------------------------------------
+# Candidate quarantine in the tuning cache
+# --------------------------------------------------------------------------
+
+
+def test_tuning_cache_quarantine_roundtrip(tmp_path):
+    path = str(tmp_path / "dse_cache.json")
+    tc = dse.TuningCache(path)
+    assert tc.quarantined("time|cand") is None
+    tc.quarantine("time|cand", "compile-error", "xla fell over")
+    assert tc.quarantined("time|cand") \
+        == {"kind": "compile-error", "detail": "xla fell over"}
+    # persisted: a fresh process sees the same quarantine, and the
+    # reserved key never reads back as a plan
+    tc2 = dse.TuningCache(path)
+    assert tc2.quarantined("time|cand") is not None
+    assert tc2.get(dse.QUARANTINE_KEY) is None
+    # plans and quarantine share the document without clobbering
+    plan = dse.TilePlan(sizes={"t": (64,)}, traffic_words=1,
+                        vmem_bytes=2, modeled_seconds=3.0)
+    tc2.put("plan-key", plan)
+    tc3 = dse.TuningCache(path)
+    assert tc3.get("plan-key") is not None
+    assert tc3.quarantined("time|cand") is not None
+
+
+# --------------------------------------------------------------------------
+# Fault-injected exploration: degrade, never die
+# --------------------------------------------------------------------------
+
+
+def _drop_plans(path):
+    """Remove cached plans (keep the quarantine) so a re-exploration
+    cannot short-circuit on the plan cache."""
+    data = resilience.load_store(path)
+    for k in [k for k in data if k != dse.QUARANTINE_KEY]:
+        del data[k]
+    resilience.save_store(path, data)
+
+
+def test_explore_with_lowering_faults_falls_back(tmp_path, monkeypatch):
+    path = str(tmp_path / "dse_cache.json")
+    monkeypatch.setenv("REPRO_FAULTS", "lower:1")
+    p = dse.filter_reduce_program(4096)
+    plan = dse.explore(p, measure="top_k", top_k=2, repeat=1, warmup=0,
+                       cache=dse.TuningCache(path), timing_db=False)
+    # every candidate's lowering failed: the analytic argmin ships
+    assert plan.measured is False and plan.timed == 0
+    assert plan.sizes and plan.vmem_bytes > 0
+    assert resilience.LOG.events(stage="time", action="quarantined")
+    assert resilience.LOG.events(action="fallback")
+    # quarantine persisted inside the cache document
+    data = resilience.load_store(path)
+    q = data.get(dse.QUARANTINE_KEY, {})
+    assert q and all(v["kind"] == "injected:lower" for v in q.values())
+
+    # the analytic plan is numerically sound: with faults off, its
+    # tile sizes certify against the codegen_jax oracle
+    monkeypatch.delenv("REPRO_FAULTS")
+    ok, why = resilience.certify_tile_plan(p, plan.sizes)
+    assert ok, why
+
+    # quarantined candidates are never re-attempted: re-explore (plan
+    # cache emptied, faults off) skips them without lowering or timing
+    _drop_plans(path)
+    resilience.LOG.reset()
+    plan2 = dse.explore(p, measure="top_k", top_k=2, repeat=1, warmup=0,
+                        cache=dse.TuningCache(path), timing_db=False)
+    assert plan2.sizes == plan.sizes
+    assert resilience.LOG.events(stage="time", action="skipped")
+    assert not resilience.LOG.events(action="quarantined")
+
+
+def test_explore_pipeline_with_timing_faults_falls_back(tmp_path,
+                                                        monkeypatch):
+    path = str(tmp_path / "dse_cache.json")
+    monkeypatch.setenv("REPRO_FAULTS", "time:1")
+    pipe = dse.filter_fold_pipeline(4096)
+    plan = dse.explore_pipeline(pipe, measure="top_k", top_k=2,
+                                repeat=1, warmup=0,
+                                cache=dse.TuningCache(path),
+                                timing_db=False)
+    assert isinstance(plan, dse.PipelinePlan)
+    assert plan.measured is False and plan.block > 0
+    assert resilience.LOG.events(stage="time", action="quarantined")
+    q = resilience.load_store(path).get(dse.QUARANTINE_KEY, {})
+    assert q and all(v["kind"] == "injected:time" for v in q.values())
+    # the analytic fallback still computes the right numbers
+    monkeypatch.delenv("REPRO_FAULTS")
+    ok, why = resilience.certify_pipeline_plan(pipe, plan)
+    assert ok, why
+
+
+def test_explore_measured_winner_certifies(tmp_path):
+    # no faults: the measured path times, certifies and promotes
+    p = dse.filter_reduce_program(4096)
+    plan = dse.explore(p, measure="top_k", top_k=2, repeat=1, warmup=0,
+                       cache=dse.TuningCache(str(tmp_path / "c.json")),
+                       timing_db=False)
+    assert plan.measured is True and plan.timed > 0
+    assert not resilience.LOG.events(action="quarantined")
+
+
+def test_failed_certification_never_promoted(tmp_path, monkeypatch):
+    path = str(tmp_path / "dse_cache.json")
+    monkeypatch.setattr(resilience, "certify_tile_plan",
+                        lambda *a, **k: (False, "forced: wrong numbers"))
+    p = dse.filter_reduce_program(4096)
+    plan = dse.explore(p, measure="top_k", top_k=2, repeat=1, warmup=0,
+                       cache=dse.TuningCache(path), timing_db=False)
+    # candidates timed fine but none certified: the measured winner is
+    # rejected and the analytic argmin ships instead
+    assert plan.measured is False and plan.timed == 0
+    assert resilience.LOG.events(stage="certify", action="quarantined")
+    assert resilience.LOG.events(action="fallback")
+    data = resilience.load_store(path)
+    q = data.get(dse.QUARANTINE_KEY, {})
+    certs = {k: v for k, v in q.items() if k.startswith("certify|")}
+    assert certs \
+        and all(v["kind"] == "certify-failed" for v in certs.values())
+    # nothing cached claims to be measured
+    for key, doc in data.items():
+        if key == dse.QUARANTINE_KEY:
+            continue
+        assert not doc.get("measured"), \
+            f"uncertified winner cached under {key}"
+
+
+def test_certify_disabled_by_policy(tmp_path, monkeypatch):
+    # certify=False promotes the fastest timing without an oracle run
+    calls = {"n": 0}
+
+    def spy(*a, **k):
+        calls["n"] += 1
+        return (True, "ok")
+
+    monkeypatch.setattr(resilience, "certify_tile_plan", spy)
+    pol = resilience.Policy(timeout_s=0, certify=False)
+    p = dse.filter_reduce_program(4096)
+    plan = dse.explore(p, measure="top_k", top_k=1, repeat=1, warmup=0,
+                       cache=False, timing_db=False, policy=pol)
+    assert plan.measured is True
+    assert calls["n"] == 0
