@@ -76,6 +76,7 @@ def timing_notes(doc: Dict) -> List[str]:
             notes.append(
                 "measured rows taken with repeat < 3: medians may be "
                 "noisy; prefer --repeat 3+ before trusting rankings")
+    notes.extend(serving_notes(doc.get("rows", [])))
     res = (doc.get("resilience") or {}).get("counts") or {}
     if res:
         # degradation is tolerated, never hidden: a run that
@@ -87,6 +88,32 @@ def timing_notes(doc: Dict) -> List[str]:
         if faults:
             notes.append(f"fault injection was active: "
                          f"REPRO_FAULTS={faults}")
+    return notes
+
+
+def serving_notes(rows: List[Dict]) -> List[str]:
+    """``serving/*`` (shape-bucket warm start) rows summarized next to
+    the gate result: per-cold-shape first-request latency before/after
+    warm start, the bucket hit rate, and background promotions."""
+    notes: List[str] = []
+    for r in rows:
+        if r.get("section") != "serving":
+            continue
+        name = r.get("name", "")
+        if name == "serving/bucket_hit_rate":
+            notes.append(f"serving bucket hit rate: {r.get('derived')}")
+        elif name == "serving/background_promotions":
+            notes.append(f"serving background re-tunes: "
+                         f"{r.get('derived')}")
+        elif "cold_us" in r:
+            shape = name.split("/", 1)[1]
+            notes.append(
+                f"serving cold-shape {shape}: first request "
+                f"{r['cold_us']:.0f}us cold-explore -> "
+                f"{r.get('warm_us', r.get('us', 0)):.0f}us "
+                f"bucket-warm-start"
+                + ("" if r.get("warm_start") else
+                   " [NOT warm-started: no tuned bucket matched]"))
     return notes
 
 

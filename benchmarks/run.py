@@ -36,6 +36,13 @@ Prints ``name,us_per_call,derived`` CSV:
               of the analytic and the calibrated model's candidate
               ranking against the measured one, plus the calibration
               profile the samples refreshed.
+  serving/*   cold-shape tail latency through the shape-bucket
+              warm-start layer (``core.buckets``): per cold shape, the
+              first-request latency of a full foreground exploration
+              vs the bucketed warm-start resolve, plus the bucket hit
+              rate and how many background re-tunes promoted a
+              certified winner.  Feeds the serving notes the
+              regression gate prints.
   resilience/* degradation accounting for the whole run
               (``core.resilience.LOG``): one row per action taken --
               candidates quarantined, transient retries, analytic
@@ -572,6 +579,71 @@ def measured():
          timed_workloads=len(rhos_a))
 
 
+def serving():
+    """Cold-shape tail latency through the shape-bucket warm-start
+    layer (``core.buckets``).  One donor shape per kernel family is
+    tuned into a scratch cache, then each *cold* shape in the same
+    bucket family is explored twice: once cold (fresh cache, full
+    foreground exploration -- the first-request latency a bucketless
+    server pays) and once bucketed (warm-start plan adapted from the
+    donor, background re-tune).  Rows report both latencies, the warm
+    plan's provenance, the bucket hit rate, and how many background
+    re-tunes promoted a certified winner."""
+    import tempfile
+    import time as time_mod
+
+    from repro.core import buckets, dse
+    from repro.core.options import Options
+
+    tmp = tempfile.mkdtemp(prefix="repro-serving-")
+    cache_path = os.path.join(tmp, "dse_cache.json")
+    buckets.reset_stats()
+
+    # (family label, program builder, donor shape, cold shapes): cold
+    # shapes share the donor's bucket family (same signature/dtype/rank)
+    # but were never explored at their exact extents
+    cases = [
+        ("attention", dse.attention_program,
+         (256, 256, 64), [(192, 256, 64), (224, 256, 64)]),
+        ("gemm", dse.gemm_program,
+         (256, 256, 256), [(250, 250, 250)]),
+    ]
+
+    warm_opts = Options(cache=cache_path, bucketing=True)
+    for label, build, donor, colds in cases:
+        dse.explore(build(*donor), options=warm_opts)  # tune the donor
+        for shape in colds:
+            p = build(*shape)
+            t0 = time_mod.perf_counter()
+            dse.explore(p, options=Options(cache=False))
+            before_s = time_mod.perf_counter() - t0
+
+            t0 = time_mod.perf_counter()
+            plan = dse.explore(p, options=warm_opts)
+            after_s = time_mod.perf_counter() - t0
+            name = f"serving/{label}/" + "x".join(map(str, shape))
+            emit(name, after_s * 1e6,
+                 f"cold_explore={before_s * 1e6:.0f}us;"
+                 f"warm_start={plan.warm_start};bucket={plan.bucket}",
+                 cold_us=round(before_s * 1e6, 1),
+                 warm_us=round(after_s * 1e6, 1),
+                 warm_start=bool(plan.warm_start),
+                 bucket=plan.bucket)
+
+    buckets.drain()
+    st = buckets.stats()
+    emit("serving/bucket_hit_rate", 0,
+         f"{buckets.hit_rate():.2f}"
+         f"(exact={st['exact_hits']},warm={st['warm_hits']},"
+         f"miss={st['misses']})",
+         hit_rate=round(buckets.hit_rate(), 3), **st)
+    emit("serving/background_promotions", 0,
+         f"{st['promotions']}/{st['retunes']} re-tunes certified "
+         "and promoted",
+         promotions=st["promotions"], retunes=st["retunes"],
+         retune_failures=st["retune_failures"])
+
+
 def resilience_rows() -> None:
     """One row per degradation action the run took (quarantined /
     retried / fallback / rebuilt / skipped), plus a total.  Zero rows
@@ -597,6 +669,7 @@ SECTIONS = {
     "autotile": autotile,
     "fused": fused,
     "measured": measured,
+    "serving": serving,
 }
 
 

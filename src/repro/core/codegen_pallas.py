@@ -670,7 +670,7 @@ def lower_fused_chain(p: ir.Pattern, depth: int = 2) -> Callable:
 def lower_fused_pipeline(pipe, *, plan=None,
                          vmem_budget: Optional[int] = None,
                          cache=None, measure: Optional[str] = None,
-                         policy=None) -> Callable:
+                         policy=None, options=None) -> Callable:
     """Lower a ``pipeline.Pipeline`` (DAG) with a joint-DSE
     ``PipelinePlan``.
 
@@ -696,7 +696,8 @@ def lower_fused_pipeline(pipe, *, plan=None,
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
     if plan is None:
         plan = explore_pipeline(pipe, vmem_budget=budget, cache=cache,
-                                measure=measure, policy=policy)
+                                measure=measure, policy=policy,
+                                options=options)
 
     group_depths = plan.depths or (2,) * len(plan.groups)
     runners = []
@@ -827,7 +828,7 @@ def lower_pipeline_for_timing(pipe, plan, *,
 
 def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
                cache=None, measure: Optional[str] = None,
-               policy=None) -> Callable:
+               policy=None, options=None) -> Callable:
     """Tile an *untiled* pattern with a DSE-chosen ``TilePlan`` and lower
     it (paper §4 automated tile-size selection feeding §5 codegen).
 
@@ -851,7 +852,7 @@ def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
     if plan is None:
         plan = explore(p, vmem_budget=budget, cache=cache,
-                       measure=measure, policy=policy)
+                       measure=measure, policy=policy, options=options)
     call = lower(tile(p, plan.sizes, vmem_budget_words=budget // 4))
     call.tile_plan = plan
     return call

@@ -55,11 +55,13 @@ from . import calibrate, ir, resilience
 from . import measure as measure_mod
 from .cost import HBM_BYTES_PER_S, VMEM_BYTES, stream_seconds, traffic
 from .memory import plan_memory
+# The exploration-option constants and the unified Options surface live
+# in core.options (a leaf module); re-exported here because this module
+# is their historical home and every consumer imports them from dse.
+from .options import (DEPTHS, MAX_POINTS, MEASURE_REPEAT, MEASURE_WARMUP,
+                      MXU, SUBLANE, TOP_K, UNSET, Options)
 from .scheduling import build_schedule, model_speedup
 from .strip_mine import insert_tile_copies, strip_mine, tile
-
-MXU = 128     # MXU systolic array edge / lane count
-SUBLANE = 8   # VPU sublane count (fp32 min tile is 8 x 128)
 
 # TPU min-tile row (sublane) multiples per dtype: the fp32 8-row tile
 # becomes 16 rows for bf16/f16 and 32 for int8/fp8 (packed sublanes).
@@ -74,11 +76,6 @@ def dtype_sublane(dtype) -> int:
     """Sublane (row) alignment for a dtype's minimum TPU tile."""
     return _DTYPE_SUBLANE.get(str(dtype), SUBLANE)
 
-# cap on priced candidates per exploration; axes are thinned (keeping
-# their endpoints) until the cross product fits.  Recorded on the
-# returned TilePlan as ``thinned=True``.
-MAX_POINTS = 4096
-
 # Cost/memory-model revision, folded into every tuning-cache key: plans
 # priced under older model semantics (e.g. the pre-PR-2 single-buffer
 # accounting for strided loads, the PR-2 chain-only pipeline pricing
@@ -89,33 +86,28 @@ MAX_POINTS = 4096
 # REPRO_DSE_CACHE on this string too.
 MODEL_VERSION = 5
 
-# Metapipeline buffer depths enumerated per candidate (2 = the classic
-# double buffer, the minimum that overlaps producer and consumer
-# stages; deeper rotating buffers hide more DMA issue latency but
-# charge ``depth x`` VMEM, so they compete with bigger tiles under the
-# budget).  The exposed-latency term saturates (cost.metapipeline_time),
-# so the optimum is workload-dependent: big tiles hide the latency at
-# depth 2 already, small streaming tiles want 3-4.
-DEPTHS = (2, 3, 4)
-
-# hybrid-mode defaults: how many analytically shortlisted candidates
-# are actually lowered and timed, and the measurement shape
-TOP_K = 3
-MEASURE_WARMUP = 1
-MEASURE_REPEAT = 3
-
 
 def _measure_mode(measure: Optional[str]) -> Optional[str]:
-    """Resolve the ``measure`` argument: explicit value wins, else the
-    ``REPRO_MEASURE`` env opt-in (so every ``auto_tile=True`` caller can
-    be switched to hybrid DSE fleet-wide)."""
-    if measure is None:
-        measure = os.environ.get("REPRO_MEASURE") or None
+    """Validate a resolved ``measure`` value.  The ``REPRO_MEASURE``
+    env opt-in is no longer consulted here: ``Options.from_env`` is the
+    single env reader, merged by ``_resolve_options``."""
     if measure in (None, False, ""):
         return None
     if measure != "top_k":
         raise ValueError(f"measure={measure!r}; supported: None, 'top_k'")
     return measure
+
+
+# legacy kwargs whose ``None`` default means "unset" (merged below
+# Options / env); ``False`` stays explicit (measure/cache/profile off)
+def _resolve_options(options: Optional[Options], **kw) -> Options:
+    """Merge one exploration's option layers: explicit kwarg >
+    ``options=Options(...)`` > ``Options.from_env()`` > defaults.
+    Returns a fully resolved ``Options`` (no ``UNSET`` fields)."""
+    explicit = Options(**{k: v for k, v in kw.items()
+                          if v is not None and v is not UNSET})
+    return Options.merged(explicit, options or Options(),
+                          Options.from_env()).resolved()
 
 
 def _resolve_profile(profile):
@@ -155,6 +147,8 @@ class TilePlan:
     measured_seconds: float = 0.0   # winner's median wall time
     timed: int = 0           # candidates actually lowered and timed
     depths: Dict[str, int] = dataclasses.field(default_factory=dict)
+    warm_start: bool = False  # adapted from a tuned bucket (core.buckets)
+    bucket: str = ""          # donor bucket signature (warm starts only)
 
     @property
     def depth(self) -> int:
@@ -203,9 +197,11 @@ def default_cache_path() -> str:
                                           "REPRO_DSE_CACHE")
 
 
-# reserved top-level key in the cache document holding the candidate
-# quarantine; plan keys are 32-hex digests, so no collision is possible
+# reserved top-level keys in the cache document: the candidate
+# quarantine and the shape-bucket donor index (core.buckets); plan keys
+# are 32-hex digests, so no collision is possible
 QUARANTINE_KEY = "__quarantine__"
+BUCKETS_KEY = "__buckets__"
 
 
 class TuningCache:
@@ -251,6 +247,13 @@ class TuningCache:
         merged = {**mine, **disk}
         if q:
             merged[QUARANTINE_KEY] = q
+        # bucket index: two-level nested merge (family -> bucket sig ->
+        # donor entry), disk winning per bucket like plans do
+        bk = dict(mine.get(BUCKETS_KEY, {}))
+        for fam, ent in disk.get(BUCKETS_KEY, {}).items():
+            bk[fam] = {**bk.get(fam, {}), **ent}
+        if bk:
+            merged[BUCKETS_KEY] = bk
         self._data = merged
 
     def get(self, key: str, cls=None) -> Optional["TilePlan"]:
@@ -283,6 +286,22 @@ class TuningCache:
         q = self._load().get(QUARANTINE_KEY)
         entry = q.get(key) if isinstance(q, dict) else None
         return entry if isinstance(entry, dict) else None
+
+    def bucket_entries(self, family: str) -> Dict[str, Dict]:
+        """The shape-bucket donor index for one pattern family:
+        {bucket signature: {"kind", "domains", "plan"}}
+        (``core.buckets`` owns the format)."""
+        bk = self._load().get(BUCKETS_KEY)
+        fam = bk.get(family) if isinstance(bk, dict) else None
+        return fam if isinstance(fam, dict) else {}
+
+    def bucket_put(self, family: str, sig: str, entry: Dict) -> None:
+        """Register a tuned plan as its bucket's warm-start donor."""
+        def mutate(data: Dict) -> None:
+            data.setdefault(BUCKETS_KEY, {}).setdefault(
+                family, {})[sig] = entry
+
+        self._update(mutate)
 
     def clear(self) -> None:
         self._data = {}
@@ -773,19 +792,21 @@ def measured_shortlist(p: ir.Pattern, *,
 
 
 def explore(p: ir.Pattern, *,
-            vmem_budget: int = VMEM_BYTES,
-            align: int = MXU,
+            vmem_budget: Optional[int] = None,
+            align: Optional[int] = None,
             space: Optional[Dict[str, List[Tuple[int, ...]]]] = None,
             cache: Union[None, bool, str, TuningCache] = None,
-            max_points: int = MAX_POINTS,
+            max_points: Optional[int] = None,
             measure: Optional[str] = None,
-            top_k: int = TOP_K,
+            top_k: Optional[int] = None,
             timing_db=None,
             profile=None,
-            warmup: int = MEASURE_WARMUP,
-            repeat: int = MEASURE_REPEAT,
-            depths: Tuple[int, ...] = DEPTHS,
-            policy: Optional[resilience.Policy] = None) -> TilePlan:
+            warmup: Optional[int] = None,
+            repeat: Optional[int] = None,
+            depths: Optional[Tuple[int, ...]] = None,
+            policy: Optional[resilience.Policy] = None,
+            bucketing: Optional[bool] = None,
+            options: Optional[Options] = None) -> TilePlan:
     """Design-space exploration over tile sizes AND metapipeline buffer
     depths for any pattern program.
 
@@ -820,10 +841,31 @@ def explore(p: ir.Pattern, *,
     certified candidate wins instead.  When every measured candidate
     fails, the analytic argmin ships (recorded as a fallback event);
     ``explore`` never raises for a candidate-level failure.
-    """
-    measure = _measure_mode(measure)
-    tc = _resolve_cache(cache)
 
+    Every kwarg can instead arrive packed in ``options=Options(...)``;
+    explicit kwargs win over the options object, which wins over the
+    ``REPRO_*`` env vars (``Options.from_env``), which win over the
+    defaults.  ``bucketing=True`` adds the shape-bucketed mode
+    (``core.buckets``): a cold shape whose pattern family has tuned
+    buckets returns a warm-start plan immediately (nearest bucket's
+    tiles re-fitted, zero lowering) while a background re-tune --
+    deadline-bounded by ``policy`` -- explores the exact shape and
+    promotes its certified winner into the cache.
+    """
+    o = _resolve_options(options, vmem_budget=vmem_budget, align=align,
+                         cache=cache, max_points=max_points,
+                         measure=measure, top_k=top_k,
+                         timing_db=timing_db, profile=profile,
+                         warmup=warmup, repeat=repeat, depths=depths,
+                         policy=policy, bucketing=bucketing)
+    vmem_budget, align = o.vmem_budget, o.align
+    max_points, measure, top_k = o.max_points, o.measure, o.top_k
+    timing_db, profile = o.timing_db, o.profile
+    warmup, repeat, depths, policy = (o.warmup, o.repeat, o.depths,
+                                      o.policy)
+    tc = _resolve_cache(o.cache)
+
+    space_was_default = space is None
     if space is None:
         space = tile_space(p, align=align)
     space, thinned = _thin(space, max_points)
@@ -841,10 +883,53 @@ def explore(p: ir.Pattern, *,
         return pattern_key(p, vmem_budget=vmem_budget, align=align,
                            extra=extra)
 
+    # explicit ``space=`` pins the candidate set to the caller's shape:
+    # a donor bucket's plan would not be comparable, so bucketing only
+    # engages for the default space
+    bucketing_on = o.bucketing and tc is not None and space_was_default
+    if bucketing_on:
+        from . import buckets as buckets_mod
+
     if tc is not None:
         hit = tc.get(key_now())
         if hit is not None:
+            if bucketing_on:
+                buckets_mod.note("exact_hits")
             return hit
+
+    if bucketing_on:
+        warm = buckets_mod.warm_start_tile(p, tc, vmem_budget=vmem_budget,
+                                           align=align)
+        if warm is not None:
+            buckets_mod.note("warm_hits")
+            pol = resilience.resolve_policy(policy)
+            # cache=False: the re-tune must not write the cache itself
+            # -- only its *certified* winner is promoted, below
+            retune_opts = dataclasses.replace(o, bucketing=False,
+                                              cache=False)
+            tag = "tile|" + key_now()
+
+            def _retune() -> TilePlan:
+                return explore(p, options=retune_opts)
+
+            def _certify(plan: TilePlan):
+                return resilience.certify_guarded(
+                    lambda: resilience.certify_tile_plan(
+                        p, plan.sizes, vmem_budget=vmem_budget),
+                    key="retune|" + tag, policy=pol)
+
+            def _promote(plan: TilePlan) -> None:
+                # key recomputed at promotion time: the background
+                # explore may have refreshed the calibration profile
+                tc.put(key_now(), plan)
+                buckets_mod.record_tile(p, plan, tc,
+                                        vmem_budget=vmem_budget,
+                                        align=align)
+
+            buckets_mod.schedule_retune(tag, _retune, certify=_certify,
+                                        promote=_promote, policy=pol)
+            return warm
+        buckets_mod.note("misses")
 
     # space already thinned above: keep the outer flag (re-thinning an
     # already-thinned space is a no-op and would report False)
@@ -919,6 +1004,9 @@ def explore(p: ir.Pattern, *,
         # key recomputed AFTER the calibration update: the next call
         # prices under the new profile hash and must hit this entry
         tc.put(key_now(), plan)
+        if bucketing_on:
+            buckets_mod.record_tile(p, plan, tc, vmem_budget=vmem_budget,
+                                    align=align)
     return plan
 
 
@@ -964,6 +1052,8 @@ class PipelinePlan:
     measured_seconds: float = 0.0   # winner's median wall time
     timed: int = 0                  # candidates lowered and timed
     depths: Tuple[int, ...] = ()    # per-group stage-buffer depth
+    warm_start: bool = False        # adapted from a tuned bucket
+    bucket: str = ""                # donor bucket signature
 
     def __post_init__(self):
         if not self.group_blocks:
@@ -1269,18 +1359,20 @@ def measured_pipeline_shortlist(pipe, *,
 
 
 def explore_pipeline(pipe, *,
-                     vmem_budget: int = VMEM_BYTES,
-                     align: int = MXU,
+                     vmem_budget: Optional[int] = None,
+                     align: Optional[int] = None,
                      cache: Union[None, bool, str, TuningCache] = None,
-                     max_points: int = MAX_POINTS,
+                     max_points: Optional[int] = None,
                      measure: Optional[str] = None,
-                     top_k: int = TOP_K,
+                     top_k: Optional[int] = None,
                      timing_db=None,
                      profile=None,
-                     warmup: int = MEASURE_WARMUP,
-                     repeat: int = MEASURE_REPEAT,
-                     depths: Tuple[int, ...] = DEPTHS,
-                     policy: Optional[resilience.Policy] = None
+                     warmup: Optional[int] = None,
+                     repeat: Optional[int] = None,
+                     depths: Optional[Tuple[int, ...]] = None,
+                     policy: Optional[resilience.Policy] = None,
+                     bucketing: Optional[bool] = None,
+                     options: Optional[Options] = None
                      ) -> PipelinePlan:
     """Joint design-space exploration for a pattern pipeline DAG.
 
@@ -1317,12 +1409,29 @@ def explore_pipeline(pipe, *,
     oracle (``pipeline.run_unfused``) before promotion; when no
     candidate survives, the analytic plan ships and a fallback event
     is recorded -- candidate-level failures never raise.
+
+    As in ``explore``, options may arrive packed in
+    ``options=Options(...)`` (explicit kwarg > options > env > default)
+    and ``bucketing=True`` enables bucketed warm starts: a cold
+    ``shared_extent`` whose pipeline family has a tuned fused bucket is
+    served an adapted plan immediately while a background re-tune
+    promotes the certified exact-shape winner.
     """
     from . import pipeline as plmod  # local import: keep layering thin
 
-    measure = _measure_mode(measure)
+    o = _resolve_options(options, vmem_budget=vmem_budget, align=align,
+                         cache=cache, max_points=max_points,
+                         measure=measure, top_k=top_k,
+                         timing_db=timing_db, profile=profile,
+                         warmup=warmup, repeat=repeat, depths=depths,
+                         policy=policy, bucketing=bucketing)
+    vmem_budget, align = o.vmem_budget, o.align
+    max_points, measure, top_k = o.max_points, o.measure, o.top_k
+    timing_db, profile = o.timing_db, o.profile
+    warmup, repeat, depths, policy = (o.warmup, o.repeat, o.depths,
+                                      o.policy)
     prof = _resolve_profile(profile)
-    tc = _resolve_cache(cache)
+    tc = _resolve_cache(o.cache)
     topo = plmod.topo_stages(pipe)
     n_stages = len(topo)
     cands = _pipeline_candidates(pipe, align, max_points)
@@ -1336,10 +1445,51 @@ def explore_pipeline(pipe, *,
         return pipeline_key(pipe, vmem_budget=vmem_budget, align=align,
                             extra=extra)
 
+    bucketing_on = o.bucketing and tc is not None
+    if bucketing_on:
+        from . import buckets as buckets_mod
+
     if tc is not None:
         hit = tc.get(key_now(), PipelinePlan)
         if hit is not None:
+            if bucketing_on:
+                buckets_mod.note("exact_hits")
             return hit
+
+    if bucketing_on:
+        warm = buckets_mod.warm_start_pipeline(
+            pipe, tc, vmem_budget=vmem_budget, align=align,
+            max_points=max_points)
+        if warm is not None:
+            buckets_mod.note("warm_hits")
+            pol = resilience.resolve_policy(policy)
+            # cache=False: the re-tune must not write the cache itself
+            # -- only its *certified* winner is promoted, below
+            retune_opts = dataclasses.replace(o, bucketing=False,
+                                              cache=False)
+            tag = "pipe|" + key_now()
+
+            def _retune() -> PipelinePlan:
+                return explore_pipeline(pipe, options=retune_opts)
+
+            def _certify(plan: PipelinePlan):
+                return resilience.certify_guarded(
+                    lambda: resilience.certify_pipeline_plan(
+                        pipe, plan, vmem_budget=vmem_budget),
+                    key="retune|" + tag, policy=pol)
+
+            def _promote(plan: PipelinePlan) -> None:
+                # key recomputed at promotion time: the background
+                # explore may have refreshed the calibration profile
+                tc.put(key_now(), plan)
+                buckets_mod.record_pipeline(pipe, plan, tc,
+                                            vmem_budget=vmem_budget,
+                                            align=align)
+
+            buckets_mod.schedule_retune(tag, _retune, certify=_certify,
+                                        promote=_promote, policy=pol)
+            return warm
+        buckets_mod.note("misses")
 
     counters = {"explored": 0, "pruned": 0}
 
@@ -1479,6 +1629,10 @@ def explore_pipeline(pipe, *,
         # key recomputed AFTER any calibration update: the next call
         # prices under the new profile hash and must hit this entry
         tc.put(key_now(), plan)
+        if bucketing_on:
+            buckets_mod.record_pipeline(pipe, plan, tc,
+                                        vmem_budget=vmem_budget,
+                                        align=align)
     return plan
 
 
@@ -1584,69 +1738,78 @@ def _one(plan: TilePlan, name: str) -> Tuple[int, ...]:
 
 
 def select_gemm_blocks(m: int, n: int, k: int, *,
-                       vmem_budget: int = VMEM_BYTES, align: int = MXU,
+                       vmem_budget: Optional[int] = None,
+                       align: Optional[int] = None,
                        cache: Union[None, bool, str, TuningCache] = None,
                        measure: Optional[str] = None,
-                       policy: Optional[resilience.Policy] = None
+                       policy: Optional[resilience.Policy] = None,
+                       options: Optional[Options] = None
                        ) -> Tuple[Tuple[int, int, int], TilePlan]:
     plan = explore(gemm_program(m, n, k), vmem_budget=vmem_budget,
                    align=align, cache=cache, measure=measure,
-                   policy=policy)
+                   policy=policy, options=options)
     (bm, bn), (bk,) = _one(plan, "gemm"), _one(plan, "gemm_k")
     return (bm, bn, bk), plan
 
 
 def select_attention_blocks(sq: int, sk: int, d: int, *,
-                            vmem_budget: int = VMEM_BYTES, align: int = MXU,
+                            vmem_budget: Optional[int] = None,
+                            align: Optional[int] = None,
                             cache: Union[None, bool, str, TuningCache] = None,
                             measure: Optional[str] = None,
-                            policy: Optional[resilience.Policy] = None
+                            policy: Optional[resilience.Policy] = None,
+                            options: Optional[Options] = None
                             ) -> Tuple[Tuple[int, int], TilePlan]:
     plan = explore(attention_program(sq, sk, d), vmem_budget=vmem_budget,
                    align=align, cache=cache, measure=measure,
-                   policy=policy)
+                   policy=policy, options=options)
     (bq,), (bk,) = _one(plan, "fa_q"), _one(plan, "fa_kv")
     return (bq, bk), plan
 
 
 def select_scan_blocks(seq: int, n: int, dh: int, *,
-                       vmem_budget: int = VMEM_BYTES, align: int = MXU,
+                       vmem_budget: Optional[int] = None,
+                       align: Optional[int] = None,
                        cache: Union[None, bool, str, TuningCache] = None,
                        measure: Optional[str] = None,
-                       policy: Optional[resilience.Policy] = None
+                       policy: Optional[resilience.Policy] = None,
+                       options: Optional[Options] = None
                        ) -> Tuple[int, TilePlan]:
     plan = explore(scan_program(seq, n, dh), vmem_budget=vmem_budget,
                    align=align, cache=cache, measure=measure,
-                   policy=policy)
+                   policy=policy, options=options)
     (chunk,) = _one(plan, "ssd")
     return chunk, plan
 
 
 def select_filter_reduce_blocks(t: int, *,
-                                vmem_budget: int = VMEM_BYTES,
-                                align: int = MXU,
+                                vmem_budget: Optional[int] = None,
+                                align: Optional[int] = None,
                                 cache: Union[None, bool, str,
                                              TuningCache] = None,
                                 measure: Optional[str] = None,
                                 policy: Optional[resilience.Policy]
-                                = None
+                                = None,
+                                options: Optional[Options] = None
                                 ) -> Tuple[int, TilePlan]:
     plan = explore(filter_reduce_program(t), vmem_budget=vmem_budget,
                    align=align, cache=cache, measure=measure,
-                   policy=policy)
+                   policy=policy, options=options)
     (bt,) = _one(plan, "fr")
     return bt, plan
 
 
 def select_groupby_blocks(t: int, num_keys: int, ew: int, *,
-                          vmem_budget: int = VMEM_BYTES, align: int = MXU,
+                          vmem_budget: Optional[int] = None,
+                          align: Optional[int] = None,
                           cache: Union[None, bool, str, TuningCache] = None,
                           measure: Optional[str] = None,
-                          policy: Optional[resilience.Policy] = None
+                          policy: Optional[resilience.Policy] = None,
+                          options: Optional[Options] = None
                           ) -> Tuple[int, TilePlan]:
     plan = explore(groupby_program(t, num_keys, ew),
                    vmem_budget=vmem_budget, align=align, cache=cache,
-                   measure=measure, policy=policy)
+                   measure=measure, policy=policy, options=options)
     (bt,) = _one(plan, "gbf")
     return bt, plan
 
@@ -1675,24 +1838,28 @@ def filter_fold_pipeline(t: int):
 
 
 def select_fused_filter_fold_blocks(
-        t: int, *, vmem_budget: int = VMEM_BYTES, align: int = MXU,
+        t: int, *, vmem_budget: Optional[int] = None,
+        align: Optional[int] = None,
         cache: Union[None, bool, str, TuningCache] = None,
         measure: Optional[str] = None,
-        policy: Optional[resilience.Policy] = None
+        policy: Optional[resilience.Policy] = None,
+        options: Optional[Options] = None
         ) -> Tuple[int, PipelinePlan]:
     """Joint-DSE streaming tile for the fused filter+fold megakernel."""
     plan = explore_pipeline(filter_fold_pipeline(t),
                             vmem_budget=vmem_budget, align=align,
-                            cache=cache, measure=measure, policy=policy)
+                            cache=cache, measure=measure, policy=policy,
+                            options=options)
     return plan.block, plan
 
 
 def select_fused_kmeans_blocks(
-        n: int, k: int, d: int, *, vmem_budget: int = VMEM_BYTES,
-        align: int = MXU,
+        n: int, k: int, d: int, *, vmem_budget: Optional[int] = None,
+        align: Optional[int] = None,
         cache: Union[None, bool, str, TuningCache] = None,
         measure: Optional[str] = None,
-        policy: Optional[resilience.Policy] = None
+        policy: Optional[resilience.Policy] = None,
+        options: Optional[Options] = None
         ) -> Tuple[int, PipelinePlan]:
     """Joint-DSE streaming tile for the fused k-means DAG megakernel
     (assign -> {scatter-sum, count}; one plan for the whole DAG, cached
@@ -1700,5 +1867,6 @@ def select_fused_kmeans_blocks(
     from repro.patterns.analytics import kmeans_pipeline
     pipe, _, _ = kmeans_pipeline(n, k, d)
     plan = explore_pipeline(pipe, vmem_budget=vmem_budget, align=align,
-                            cache=cache, measure=measure, policy=policy)
+                            cache=cache, measure=measure, policy=policy,
+                            options=options)
     return plan.block, plan

@@ -224,9 +224,10 @@ class TimingDB:
             pass
 
 
-def _resolve_db(db) -> Optional[TimingDB]:
-    """``None`` -> default on-disk DB, path/TimingDB -> that DB,
-    ``False`` -> no persistence."""
+def resolve_db(db) -> Optional[TimingDB]:
+    """Resolve the ``timing_db`` option (the same convention
+    ``dse.Options`` carries): ``None`` -> default on-disk DB,
+    path/TimingDB -> that DB, ``False`` -> no persistence."""
     if db is False:
         return None
     if db is None:
@@ -234,6 +235,10 @@ def _resolve_db(db) -> Optional[TimingDB]:
     if isinstance(db, str):
         return TimingDB(db)
     return db
+
+
+# historical private name, kept for existing callers
+_resolve_db = resolve_db
 
 
 def timed(key: str, make_fn: Callable[[], Callable[[], object]], *,

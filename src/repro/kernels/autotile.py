@@ -17,7 +17,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Union
 
-from repro.core.cost import VMEM_BYTES
 from repro.core.dse import MXU, SUBLANE, TuningCache, select_gemm_blocks
 
 LANE = SUBLANE  # historical alias
@@ -33,18 +32,19 @@ class TileChoice:
 
 
 def select_gemm_tiles(m: int, n: int, k: int, *,
-                      vmem_budget: int = VMEM_BYTES,
-                      align: int = MXU,
+                      vmem_budget: Union[None, int] = None,
+                      align: Union[None, int] = None,
                       cache: Union[None, bool, str, TuningCache] = None,
                       measure: Union[None, str] = None,
-                      policy=None) -> TileChoice:
+                      policy=None, options=None) -> TileChoice:
     """DSE over (bm, bn, bk): minimize modeled HBM traffic of the tiled
     IR subject to the VMEM budget (delegates to ``core.dse.explore``;
     ``measure="top_k"`` backs the choice with real timings; ``policy``
-    bounds the measured exploration)."""
+    bounds the measured exploration; ``options`` (a ``dse.Options``)
+    packs any exploration option)."""
     (bm, bn, bk), plan = select_gemm_blocks(
         m, n, k, vmem_budget=vmem_budget, align=align, cache=cache,
-        measure=measure, policy=policy)
+        measure=measure, policy=policy, options=options)
     return TileChoice(bm, bn, bk, plan.traffic_words, plan.vmem_bytes)
 
 

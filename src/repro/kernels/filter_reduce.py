@@ -8,7 +8,6 @@ reduction consumes values in place (the paper's vertical fusion).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -18,12 +17,11 @@ from jax.experimental import pallas as pl
 INTERPRET = True
 
 
-@functools.lru_cache(maxsize=None)
 def _auto_blocks(t: int, measure: Optional[str] = None,
-                 policy=None) -> int:
-    from repro.core.dse import select_filter_reduce_blocks
-    bt, _ = select_filter_reduce_blocks(t, measure=measure,
-                                        policy=policy)
+                 policy=None, options=None) -> int:
+    from .ops import resolve_plan  # shared memoized selector front door
+    bt, _ = resolve_plan("filter_reduce", t, measure=measure,
+                         policy=policy, options=options)
     return bt
 
 
@@ -43,14 +41,16 @@ def _fr_kernel(x_ref, w_ref, lo_ref, hi_ref, o_ref):
 def filter_reduce(x: jax.Array, weight: jax.Array, lo, hi, *,
                   block_t: int = 1024, auto_tile: bool = False,
                   measure: Optional[str] = None, policy=None,
+                  options=None,
                   interpret: Optional[bool] = None) -> jax.Array:
     """``auto_tile=True`` picks block_t by DSE on the fused filter+fold
     proxy (``repro.core.dse.filter_reduce_program``); ``measure="top_k"``
     backs the choice with real timings (hybrid DSE); ``policy`` (a
-    ``core.resilience.Policy``) bounds the measured exploration."""
+    ``core.resilience.Policy``) bounds the measured exploration;
+    ``options`` (a ``core.dse.Options``) packs any exploration option."""
     (t,) = x.shape
     if auto_tile:
-        block_t = _auto_blocks(t, measure, policy)
+        block_t = _auto_blocks(t, measure, policy, options)
     block_t = min(block_t, t)
     assert t % block_t == 0
     lo = jnp.asarray([lo], jnp.float32)

@@ -24,12 +24,12 @@ INTERPRET = True
 NEG_INF = -1e30
 
 
-@functools.lru_cache(maxsize=None)
 def _auto_blocks(sq: int, sk: int, d: int,
-                 measure: Optional[str] = None, policy=None) -> tuple:
-    from repro.core.dse import select_attention_blocks
-    blocks, _ = select_attention_blocks(sq, sk, d, measure=measure,
-                                        policy=policy)
+                 measure: Optional[str] = None, policy=None,
+                 options=None) -> tuple:
+    from .ops import resolve_plan  # shared memoized selector front door
+    blocks, _ = resolve_plan("attention", sq, sk, d, measure=measure,
+                             policy=policy, options=options)
     return blocks
 
 
@@ -80,6 +80,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_q: int = 128, block_k: int = 128,
                     auto_tile: bool = False,
                     measure: Optional[str] = None, policy=None,
+                    options=None,
                     interpret: Optional[bool] = None) -> jax.Array:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) -> (B, Hq, Sq, D).
 
@@ -95,7 +96,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     group = hq // hkv
     scale = scale if scale is not None else d ** -0.5
     if auto_tile:
-        block_q, block_k = _auto_blocks(sq, sk, d, measure, policy)
+        block_q, block_k = _auto_blocks(sq, sk, d, measure, policy,
+                                        options)
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
     assert sq % block_q == 0 and sk % block_k == 0

@@ -11,7 +11,6 @@ shape ``core.pipeline`` generates for arbitrary pattern chains.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -22,12 +21,11 @@ from jax.experimental.pallas import tpu as pltpu
 INTERPRET = True
 
 
-@functools.lru_cache(maxsize=None)
 def _auto_blocks(t: int, measure: Optional[str] = None,
-                 policy=None) -> int:
-    from repro.core.dse import select_fused_filter_fold_blocks
-    bt, _ = select_fused_filter_fold_blocks(t, measure=measure,
-                                            policy=policy)
+                 policy=None, options=None) -> int:
+    from .ops import resolve_plan  # shared memoized selector front door
+    bt, _ = resolve_plan("fused_filter_fold", t, measure=measure,
+                         policy=policy, options=options)
     return bt
 
 
@@ -50,7 +48,7 @@ def _ff_kernel(x_ref, w_ref, lo_ref, hi_ref, o_ref, mask_ref):
 def fused_filter_fold(x: jax.Array, weight: jax.Array, lo, hi, *,
                       block_t: int = 1024, auto_tile: bool = False,
                       measure: Optional[str] = None,
-                      policy=None,
+                      policy=None, options=None,
                       interpret: Optional[bool] = None) -> jax.Array:
     """``sum(where(lo <= x < hi, x * weight, 0))`` as a fused two-stage
     megakernel.  ``auto_tile=True`` picks ``block_t`` by *joint* DSE on
@@ -62,7 +60,7 @@ def fused_filter_fold(x: jax.Array, weight: jax.Array, lo, hi, *,
     """
     (t,) = x.shape
     if auto_tile:
-        block_t = _auto_blocks(t, measure, policy)
+        block_t = _auto_blocks(t, measure, policy, options)
     block_t = min(block_t, t)
     assert t % block_t == 0
     lo = jnp.asarray([lo], jnp.float32)

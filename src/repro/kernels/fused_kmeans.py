@@ -17,7 +17,6 @@ pins down the multi-output megakernel template in plain Pallas.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -28,12 +27,12 @@ from jax.experimental.pallas import tpu as pltpu
 INTERPRET = True
 
 
-@functools.lru_cache(maxsize=None)
 def _auto_blocks(n: int, k: int, d: int,
-                 measure: Optional[str] = None, policy=None) -> int:
-    from repro.core.dse import select_fused_kmeans_blocks
-    bn, _ = select_fused_kmeans_blocks(n, k, d, measure=measure,
-                                       policy=policy)
+                 measure: Optional[str] = None, policy=None,
+                 options=None) -> int:
+    from .ops import resolve_plan  # shared memoized selector front door
+    bn, _ = resolve_plan("fused_kmeans", n, k, d, measure=measure,
+                         policy=policy, options=options)
     return bn
 
 
@@ -62,6 +61,7 @@ def _km_kernel(pts_ref, cents_ref, sums_ref, counts_ref, assign_ref):
 def fused_kmeans_step(points: jax.Array, centroids: jax.Array, *,
                       block_n: int = 128, auto_tile: bool = False,
                       measure: Optional[str] = None, policy=None,
+                      options=None,
                       interpret: Optional[bool] = None
                       ) -> Tuple[jax.Array, jax.Array]:
     """One k-means update step as a single two-output megakernel:
@@ -76,7 +76,7 @@ def fused_kmeans_step(points: jax.Array, centroids: jax.Array, *,
     k, d2 = centroids.shape
     assert d == d2, (points.shape, centroids.shape)
     if auto_tile:
-        block_n = _auto_blocks(n, k, d, measure, policy)
+        block_n = _auto_blocks(n, k, d, measure, policy, options)
     block_n = min(block_n, n)
     assert n % block_n == 0
     sums, counts = pl.pallas_call(

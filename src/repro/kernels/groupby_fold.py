@@ -18,12 +18,12 @@ from jax.experimental import pallas as pl
 INTERPRET = True
 
 
-@functools.lru_cache(maxsize=None)
 def _auto_blocks(t: int, num_keys: int, ew: int,
-                 measure: Optional[str] = None, policy=None) -> int:
-    from repro.core.dse import select_groupby_blocks
-    bt, _ = select_groupby_blocks(t, num_keys, ew, measure=measure,
-                                  policy=policy)
+                 measure: Optional[str] = None, policy=None,
+                 options=None) -> int:
+    from .ops import resolve_plan  # shared memoized selector front door
+    bt, _ = resolve_plan("groupby", t, num_keys, ew, measure=measure,
+                         policy=policy, options=options)
     return bt
 
 
@@ -43,6 +43,7 @@ def _gbf_kernel(k_ref, v_ref, o_ref, *, num_keys: int):
 def groupby_fold(keys: jax.Array, values: jax.Array, num_keys: int, *,
                  block_t: int = 256, auto_tile: bool = False,
                  measure: Optional[str] = None, policy=None,
+                 options=None,
                  interpret: Optional[bool] = None) -> jax.Array:
     """out[k] = sum over i with keys[i]==k of values[i].
 
@@ -56,7 +57,7 @@ def groupby_fold(keys: jax.Array, values: jax.Array, num_keys: int, *,
         values = values[:, None]
     t, ew = values.shape
     if auto_tile:
-        block_t = _auto_blocks(t, num_keys, ew, measure, policy)
+        block_t = _auto_blocks(t, num_keys, ew, measure, policy, options)
     block_t = min(block_t, t)
     assert t % block_t == 0
     out = pl.pallas_call(

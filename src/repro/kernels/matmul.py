@@ -24,13 +24,12 @@ from jax.experimental.pallas import tpu as pltpu
 INTERPRET = True  # CPU container; flip on real TPU
 
 
-@functools.lru_cache(maxsize=None)
 def _auto_blocks(m: int, n: int, k: int,
-                 measure: Optional[str] = None,
-                 policy=None) -> Tuple[int, int, int]:
-    from repro.core.dse import select_gemm_blocks
-    blocks, _ = select_gemm_blocks(m, n, k, measure=measure,
-                                   policy=policy)
+                 measure: Optional[str] = None, policy=None,
+                 options=None) -> Tuple[int, int, int]:
+    from .ops import resolve_plan  # shared memoized selector front door
+    blocks, _ = resolve_plan("gemm", m, n, k, measure=measure,
+                             policy=policy, options=options)
     return blocks
 
 
@@ -51,7 +50,7 @@ def matmul(x: jax.Array, y: jax.Array, *,
            block_m: int = 128, block_n: int = 128, block_k: int = 128,
            out_dtype: Optional[jnp.dtype] = None,
            auto_tile: bool = False,
-           measure: Optional[str] = None, policy=None,
+           measure: Optional[str] = None, policy=None, options=None,
            interpret: Optional[bool] = None) -> jax.Array:
     """``x @ y`` with explicit VMEM tiling. Shapes must divide blocks.
 
@@ -59,14 +58,16 @@ def matmul(x: jax.Array, y: jax.Array, *,
     tile plan for this (m, n, k); ``measure="top_k"`` additionally backs
     the plan with real timings (hybrid DSE, ``core.measure``);
     ``policy`` (a ``core.resilience.Policy``) bounds that measured
-    exploration with deadlines, quarantine and plan certification.
+    exploration with deadlines, quarantine and plan certification;
+    ``options`` (a ``core.dse.Options``) packs any exploration option,
+    including ``bucketing=True`` warm starts.
     """
     m, k = x.shape
     k2, n = y.shape
     assert k == k2, (x.shape, y.shape)
     if auto_tile:
         block_m, block_n, block_k = _auto_blocks(m, n, k, measure,
-                                                 policy)
+                                                 policy, options)
     block_m = min(block_m, m)
     block_n = min(block_n, n)
     block_k = min(block_k, k)

@@ -4,6 +4,10 @@ Every op takes ``use_pallas``: True -> the Pallas kernel (interpret mode
 on CPU, compiled on TPU); False -> the jnp oracle (used by the 512-device
 dry-run, where interpret-mode kernels would be pure overhead).  Both
 paths are numerically validated against each other in tests/.
+
+``resolve_plan`` is the shared auto-tile front door: every kernel's
+``auto_tile=True`` path resolves its DSE plan here (one memo, one
+selector table) instead of carrying a private ``_auto_blocks`` copy.
 """
 from __future__ import annotations
 
@@ -19,6 +23,61 @@ from . import groupby_fold as _gbf
 from . import matmul as _mm
 from . import ref
 from . import ssd_scan as _ssd
+
+# pattern-domain kind -> core.dse selector; every selector returns
+# (blocks, plan) where ``blocks`` is whatever tile tuple/scalar the
+# kernel's pallas_call consumes
+_SELECTORS = {
+    "gemm": "select_gemm_blocks",
+    "attention": "select_attention_blocks",
+    "scan": "select_scan_blocks",
+    "filter_reduce": "select_filter_reduce_blocks",
+    "groupby": "select_groupby_blocks",
+    "fused_filter_fold": "select_fused_filter_fold_blocks",
+    "fused_kmeans": "select_fused_kmeans_blocks",
+}
+
+_PLAN_MEMO: dict = {}
+
+
+def resolve_plan(kind: str, *shape: int, measure: Optional[str] = None,
+                 policy=None, options=None):
+    """Resolve the DSE tile plan for ``kind`` at ``shape``.
+
+    Returns the selector's ``(blocks, plan)``: ``blocks`` is the tile
+    tuple (or scalar) the kernel consumes, ``plan`` the full
+    ``TilePlan`` / ``PipelinePlan``.  Results are memoized in-process
+    (the on-disk TuningCache already dedupes across processes, but the
+    memo also skips proxy-program construction and cache IO on the hot
+    serving path).  Plans adapted from a shape bucket
+    (``plan.warm_start``) are *not* memoized: once the background
+    re-tune promotes the exact-shape winner, the next resolve picks it
+    up from the cache.
+    """
+    from repro.core import dse
+
+    if kind not in _SELECTORS:
+        raise ValueError(f"unknown plan kind {kind!r}; "
+                         f"one of {sorted(_SELECTORS)}")
+    key = None
+    try:
+        key = (kind, shape, measure, policy, options)
+        hit = _PLAN_MEMO.get(key)
+    except TypeError:      # unhashable policy/options: skip the memo
+        hit = None
+    if hit is not None:
+        return hit
+    result = getattr(dse, _SELECTORS[kind])(*shape, measure=measure,
+                                            policy=policy,
+                                            options=options)
+    if key is not None and not getattr(result[1], "warm_start", False):
+        _PLAN_MEMO[key] = result
+    return result
+
+
+def clear_plan_memo() -> None:
+    """Drop the in-process plan memo (tests; cache path changes)."""
+    _PLAN_MEMO.clear()
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "block_m",

@@ -23,12 +23,12 @@ from jax.experimental.pallas import tpu as pltpu
 INTERPRET = True
 
 
-@functools.lru_cache(maxsize=None)
 def _auto_blocks(seq: int, n: int, dh: int,
-                 measure: Optional[str] = None, policy=None) -> int:
-    from repro.core.dse import select_scan_blocks
-    chunk, _ = select_scan_blocks(seq, n, dh, measure=measure,
-                                  policy=policy)
+                 measure: Optional[str] = None, policy=None,
+                 options=None) -> int:
+    from .ops import resolve_plan  # shared memoized selector front door
+    chunk, _ = resolve_plan("scan", seq, n, dh, measure=measure,
+                            policy=policy, options=options)
     return chunk
 
 
@@ -70,7 +70,7 @@ def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, h_ref, *,
 
 def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
              C: jax.Array, *, chunk: int = 128, auto_tile: bool = False,
-             measure: Optional[str] = None, policy=None,
+             measure: Optional[str] = None, policy=None, options=None,
              interpret: Optional[bool] = None) -> jax.Array:
     """See ref.ssd_scan for semantics.  seq must divide ``chunk``.
 
@@ -80,7 +80,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
     bsz, seq, h, dh = x.shape
     n = B.shape[-1]
     if auto_tile:
-        chunk = _auto_blocks(seq, n, dh, measure, policy)
+        chunk = _auto_blocks(seq, n, dh, measure, policy, options)
     chunk = min(chunk, seq)
     assert seq % chunk == 0, (seq, chunk)
     nc = seq // chunk

@@ -1,16 +1,27 @@
-"""Serving driver: batched prefill + decode with a KV cache.
+"""Serving driver: batched one-call prefill + decode with a KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
         --smoke --batch 4 --prompt-len 32 --gen 16
 
 Demonstrates the full inference path (the ``decode_*`` dry-run shapes
-lower exactly this ``serve_step``): prefill the prompt token-by-token
-into the cache, then greedy-decode ``--gen`` new tokens.
+lower exactly this ``serve_step``): the whole prompt prefills the cache
+in a single jitted call (``steps.make_cache_prefill_step`` -- block
+decode for attention families, an in-jit token scan for recurrent
+ones), then ``--gen`` tokens greedy-decode one step at a time.
+
+``--prompt-lens 24,100,100,360`` serves a mixed batch: requests are
+grouped by prompt length and each group prefills in one call.  With
+``--bucketing`` the tuning plans backing each group's attention shape
+resolve through the shape-bucket layer (``core.buckets``): a cold
+prompt length whose bucket is already tuned is served a warm-start
+plan immediately (zero foreground lowering) while a bounded background
+re-tune promotes the certified exact-shape winner into the cache.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,48 +32,132 @@ from repro.launch import steps as steps_mod
 from repro.models import model
 
 
+def _prefill(prefill_fn, params, cache, prompt, ring: int,
+             index0: int = 0):
+    """Prefill ``prompt`` into ``cache`` starting at ``index0``,
+    chunking at the KV ring boundary (a block write must not wrap)."""
+    plen = prompt.shape[1]
+    i, nxt = 0, None
+    while i < plen:
+        chunk = min(plen - i, ring - ((index0 + i) % ring))
+        nxt, cache = prefill_fn(params, cache, prompt[:, i:i + chunk],
+                                jnp.int32(index0 + i))
+        i += chunk
+    return nxt, cache
+
+
+def _ring_len(cfg, max_len: int) -> int:
+    """Slot count of the KV ring buffer (= prompt-chunk bound); the
+    recurrent scan path has no ring, so any chunk length works."""
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        return model.cache_specs(cfg, 1, max_len)["k"].shape[3]
+    return max_len
+
+
+def _resolve_group_plans(cfg, lengths: Sequence[int], max_len: int
+                         ) -> List[Dict]:
+    """Resolve the DSE attention plan for each prompt-length group
+    through the shape-bucket layer.  Returns per-group provenance:
+    did the plan come from the exact tuning cache, a bucket warm
+    start, or a fresh exploration?"""
+    from repro.core import buckets
+    from repro.core.options import Options
+    from repro.kernels import ops
+
+    opts = Options(bucketing=True)
+    head_dim = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
+    rows = []
+    for plen in lengths:
+        t0 = time.time()
+        _, plan = ops.resolve_plan("attention", int(plen), int(max_len),
+                                   int(head_dim), options=opts)
+        rows.append({
+            "prompt_len": int(plen),
+            "resolve_s": time.time() - t0,
+            "warm_start": bool(plan.warm_start),
+            "bucket": plan.bucket,
+            "cached": bool(plan.cached),
+            "sizes": {k: tuple(v) for k, v in plan.sizes.items()},
+        })
+    rows.append({"bucket_stats": buckets.stats(),
+                 "bucket_hit_rate": buckets.hit_rate()})
+    return rows
+
+
 def serve(arch: str, smoke: bool, batch: int, prompt_len: int,
-          gen: int, seed: int = 0):
+          gen: int, seed: int = 0,
+          prompt_lens: Optional[Sequence[int]] = None,
+          bucketing: bool = False) -> np.ndarray:
+    """Serve ``batch`` requests; returns the (batch, gen) generated
+    tokens (requests keep their input order even when mixed prompt
+    lengths are re-grouped internally)."""
     cfg = get_config(arch, smoke=smoke)
     params = model.init_params(cfg, jax.random.PRNGKey(seed))
-    max_len = prompt_len + gen
-    cache = model.init_cache(cfg, batch, max_len)
+    lens = list(prompt_lens) if prompt_lens else [prompt_len] * batch
+    if len(lens) != batch:
+        raise ValueError(f"--prompt-lens gave {len(lens)} lengths for "
+                         f"--batch {batch}")
+    max_len = max(lens) + gen
+    prefill_fn = jax.jit(steps_mod.make_cache_prefill_step(cfg),
+                         donate_argnums=(1,))
     step_fn = jax.jit(steps_mod.make_serve_step(cfg), donate_argnums=(1,))
 
     rng = np.random.RandomState(seed)
-    if cfg.n_codebooks:
-        prompt = rng.randint(0, cfg.vocab,
-                             (batch, prompt_len, cfg.n_codebooks))
-    else:
-        prompt = rng.randint(0, cfg.vocab, (batch, prompt_len))
-    prompt = jnp.asarray(prompt, jnp.int32)
+    tok_shape = ((batch, max(lens), cfg.n_codebooks) if cfg.n_codebooks
+                 else (batch, max(lens)))
+    prompt_pool = rng.randint(0, cfg.vocab, tok_shape)
 
-    # prefill token-by-token through the decode path (a production
-    # server would use the batched prefill_step; this exercises the
-    # cache machinery end to end)
-    t0 = time.time()
-    nxt = None
-    for i in range(prompt_len):
-        tok = prompt[:, i:i + 1]
-        nxt, cache = step_fn(params, cache, tok, jnp.int32(i))
-    prefill_s = time.time() - t0
+    # group requests by prompt length: each group prefills its whole
+    # prompt in one call (one compile per distinct length)
+    groups: Dict[int, List[int]] = {}
+    for r, ln in enumerate(lens):
+        groups.setdefault(ln, []).append(r)
 
-    out_tokens = []
-    t0 = time.time()
-    for i in range(prompt_len, prompt_len + gen):
+    if bucketing:
+        for row in _resolve_group_plans(cfg, sorted(groups), max_len):
+            print("plan:", row)
+
+    out = np.zeros((batch, gen), np.int64)
+    prefill_s = decode_s = 0.0
+    for ln, rows in sorted(groups.items()):
+        gb = len(rows)
+        prompt = jnp.asarray(prompt_pool[rows][:, :ln], jnp.int32)
+        cache = model.init_cache(cfg, gb, ln + gen)
+        ring = _ring_len(cfg, ln + gen)
+
+        t0 = time.time()
+        nxt, cache = _prefill(prefill_fn, params, cache, prompt, ring)
+        jax.block_until_ready(nxt)
+        prefill_s += time.time() - t0
+
+        group_out = []
+        t0 = time.time()
+        for i in range(ln, ln + gen):
+            if cfg.n_codebooks:
+                tok = nxt.reshape(gb, 1, cfg.n_codebooks)
+            else:
+                tok = nxt.reshape(gb, 1)
+            nxt, cache = step_fn(params, cache, tok, jnp.int32(i))
+            group_out.append(np.asarray(nxt))
+        decode_s += time.time() - t0
+
+        toks = np.stack(group_out, axis=1)        # (gb, gen[, ncb])
         if cfg.n_codebooks:
-            tok = nxt.reshape(batch, 1, cfg.n_codebooks)
-        else:
-            tok = nxt.reshape(batch, 1)
-        nxt, cache = step_fn(params, cache, tok, jnp.int32(i))
-        out_tokens.append(np.asarray(nxt))
-    decode_s = time.time() - t0
+            toks = toks[..., 0]                   # report codebook 0
+        out[rows] = toks
 
-    toks = np.stack(out_tokens, axis=1)
-    print(f"prefill {prompt_len} tokens: {prefill_s:.2f}s; "
+    n_groups = len(groups)
+    print(f"prefill {sorted(groups)} ({n_groups} group"
+          f"{'s' if n_groups > 1 else ''}): {prefill_s:.2f}s; "
           f"decode {gen} tokens: {decode_s:.2f}s "
-          f"({decode_s / max(gen,1) * 1e3:.0f} ms/token)")
-    return toks
+          f"({decode_s / max(gen, 1) * 1e3:.0f} ms/token)")
+    return out
+
+
+def _parse_lens(text: Optional[str]) -> Optional[Tuple[int, ...]]:
+    if not text:
+        return None
+    return tuple(int(x) for x in text.split(",") if x.strip())
 
 
 def main():
@@ -71,10 +166,17 @@ def main():
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-lens", type=str, default=None,
+                    help="comma-separated per-request prompt lengths "
+                         "(mixed batch; overrides --prompt-len)")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--bucketing", action="store_true",
+                    help="resolve tuning plans through the shape-bucket "
+                         "warm-start layer and print their provenance")
     args = ap.parse_args()
     toks = serve(args.arch, args.smoke, args.batch, args.prompt_len,
-                 args.gen)
+                 args.gen, prompt_lens=_parse_lens(args.prompt_lens),
+                 bucketing=args.bucketing)
     print("generated token block:", toks.shape)
 
 

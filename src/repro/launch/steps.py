@@ -134,3 +134,43 @@ def make_serve_step(cfg: ModelConfig):
         return nxt, new_cache
 
     return serve_step
+
+
+def make_cache_prefill_step(cfg: ModelConfig):
+    """Prefill a whole prompt block into the decode cache in ONE jitted
+    call: ``(params, cache, tokens(B, S[, ncb]), index) -> (next, cache)``
+    with ``next`` the greedy token after the final prompt position.
+
+    Attention families run the block through ``decode_step`` directly
+    (S tokens written to the cache contiguously, causal within the
+    block); recurrent families (ssm, hybrid) carry per-token state, so
+    the block scans token-by-token *inside* the jit -- still one
+    compiled call per prompt length, not one dispatch per token.  The
+    block must not wrap the KV ring buffer; callers chunk long prompts
+    at the ring boundary (``launch.serve`` does).
+    """
+    block = cfg.family in ("dense", "moe", "audio", "vlm")
+
+    def _greedy(logits):
+        logits = model.mask_vocab_pad(logits, cfg)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    def prefill_cache_step(params, cache, tokens, index):
+        if block:
+            logits, cache2 = model.decode_step(params, cfg, cache,
+                                               tokens, index)
+            return _greedy(logits), cache2
+
+        def body(carry, tok):
+            cache, i = carry
+            # restore the step's token axis the scan consumed
+            tok = tok[:, None] if tok.ndim == 1 else tok[:, None, :]
+            logits, cache = model.decode_step(params, cfg, cache, tok, i)
+            return (cache, i + 1), _greedy(logits)
+
+        xs = jnp.moveaxis(tokens, 1, 0)   # (S, B[, ncb])
+        (cache2, _), nxts = jax.lax.scan(
+            body, (cache, jnp.asarray(index, jnp.int32)), xs)
+        return nxts[-1], cache2
+
+    return prefill_cache_step

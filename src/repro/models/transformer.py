@@ -138,13 +138,21 @@ def _attn(p: Dict, x: jax.Array, cfg: ModelConfig,
                             qg.astype(jnp.float32),
                             ck.astype(jnp.float32)) * dh ** -0.5
         slotpos = jnp.arange(c)
-        # ring semantics: slot j holds absolute position
-        #   cache_index - ((widx - j) mod C); valid if <= cache_index
-        abspos = cache_index - (widx - slotpos) % c
-        valid = abspos <= cache_index
+        # ring semantics relative to the LAST slot this block wrote
+        # (slots widx .. widx+s-1 hold positions cache_index ..
+        # cache_index+s-1; the block never wraps the ring): slot j
+        # holds absolute position last - ((wlast - j) mod C).  Each
+        # query row i sits at position cache_index + i and attends
+        # causally; abspos < 0 marks never-written slots (their zero
+        # k/v must not leak into the softmax).
+        last = cache_index + s - 1
+        wlast = widx + s - 1
+        abspos = last - (wlast - slotpos) % c
+        qpos = cache_index + jnp.arange(s)
+        valid = (abspos[None, :] <= qpos[:, None]) & (abspos >= 0)[None, :]
         if cfg.sliding_window is not None:
-            valid &= abspos > cache_index - cfg.sliding_window
-        scores = jnp.where(valid[None, None, None, None, :],
+            valid &= abspos[None, :] > qpos[:, None] - cfg.sliding_window
+        scores = jnp.where(valid[None, :, None, None, :],
                            scores, -jnp.inf)
         probs = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bskgc,bkch->bskgh", probs,
@@ -394,11 +402,19 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
 
 def decode_step(params: Params, cfg: ModelConfig, cache: Dict,
                 tokens: jax.Array, index: jax.Array):
-    """One decode step.  tokens: (B, 1[, n_codebooks]); index: scalar
-    current position (number of tokens already in the cache)."""
+    """One decode step.  tokens: (B, S[, n_codebooks]); index: scalar
+    current position (number of tokens already in the cache).
+
+    ``S > 1`` is block decode -- the whole-prompt prefill path: the S
+    tokens are written to the cache contiguously at ``index`` and
+    attend causally among themselves and over the cache.  The block
+    must not wrap the ring buffer (``index % C + S <= C``); serving
+    callers chunk prompts at the ring boundary.
+    """
     x = _embed_tokens(params, cfg, tokens)
     b = x.shape[0]
-    positions = jnp.full((1,), index, jnp.int32)
+    s = x.shape[1]
+    positions = index + jnp.arange(s, dtype=jnp.int32)
     attn, dense, moe = _layer_stacks(params, cfg)
     period = cfg.moe_layer_period if cfg.n_experts else 1
     n_super = cfg.n_layers // period

@@ -12,10 +12,20 @@ def _isolated_dse_cache(tmp_path, monkeypatch):
     monkeypatch.setenv("REPRO_CALIB_PROFILE",
                        str(tmp_path / "calibration.json"))
     monkeypatch.delenv("REPRO_MEASURE", raising=False)
+    monkeypatch.delenv("REPRO_BUCKETING", raising=False)
     # ambient resilience state must not leak into tests: no injected
     # faults, default policy knobs, and a fresh failure-event log
     for var in ("REPRO_FAULTS", "REPRO_FAULTS_SEED", "REPRO_TIMEOUT_S",
                 "REPRO_RETRIES", "REPRO_BACKOFF_S", "REPRO_CERTIFY"):
         monkeypatch.delenv(var, raising=False)
-    from repro.core import resilience
+    from repro.core import buckets, resilience
+    from repro.kernels import ops
     resilience.LOG.reset()
+    buckets.reset_stats()
+    # the plan memo keys on shape only, not the per-test cache path --
+    # a plan memoized under one test's cache must not satisfy the next
+    ops.clear_plan_memo()
+    yield
+    # don't let a background re-tune spawned by one test mutate the
+    # next test's (re-pointed) caches
+    buckets.drain(timeout=10.0)

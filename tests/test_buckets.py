@@ -1,0 +1,296 @@
+"""Shape buckets + warm-start re-tuning + the unified Options surface.
+
+Covers the ISSUE-8 acceptance points: kwarg > options > env > default
+precedence (and legacy-kwarg call sites producing plans identical to
+``options=Options(...)``), bucket-key round-trip through the tuning
+cache, nearest-bucket warm start with *zero foreground lowering*,
+certified-only background promotion, and numerical equivalence of a
+warm-started (padded-to-bucket) kernel against the exact-shape oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.core import buckets, dse, resilience
+from repro.core.dse import TuningCache
+from repro.core.options import DEPTHS, MAX_POINTS, UNSET, Options
+from repro.core.cost import VMEM_BYTES
+
+
+# ------------------------------------------------------------ Options
+def test_options_defaults_resolved():
+    o = Options().resolved()
+    assert o.vmem_budget == VMEM_BYTES
+    assert o.max_points == MAX_POINTS
+    assert o.depths == DEPTHS
+    assert o.measure is None
+    assert o.bucketing is False
+
+
+def test_options_precedence_kwarg_options_env_default(monkeypatch):
+    """Explicit kwarg > options=Options(...) > env > built-in default,
+    per field."""
+    # env beats default
+    monkeypatch.setenv("REPRO_BUCKETING", "1")
+    monkeypatch.setenv("REPRO_DSE_CACHE", "/tmp/env-cache.json")
+    o = dse._resolve_options(None)
+    assert o.bucketing is True
+    assert o.cache == "/tmp/env-cache.json"
+    # options beats env (cache=False is a *set* value, not "unset")
+    o = dse._resolve_options(Options(cache=False, bucketing=False))
+    assert o.cache is False
+    assert o.bucketing is False
+    # kwarg beats options -- including falsy explicit values
+    o = dse._resolve_options(Options(max_points=99, bucketing=True),
+                             max_points=7, bucketing=False)
+    assert o.max_points == 7
+    assert o.bucketing is False
+    # a None-valued kwarg is "not passed", not an override
+    o = dse._resolve_options(Options(measure="top_k"), measure=None)
+    assert o.measure == "top_k"
+
+
+def test_options_from_env_is_the_single_env_reader(monkeypatch):
+    for var in ("REPRO_MEASURE", "REPRO_DSE_CACHE", "REPRO_TIMING_DB",
+                "REPRO_BUCKETING", "REPRO_TIMEOUT_S"):
+        monkeypatch.delenv(var, raising=False)
+    o = Options.from_env()
+    assert all(getattr(o, f) is UNSET
+               for f in ("measure", "cache", "timing_db", "bucketing",
+                         "policy"))
+    monkeypatch.setenv("REPRO_MEASURE", "top_k")
+    monkeypatch.setenv("REPRO_BUCKETING", "yes")
+    monkeypatch.setenv("REPRO_TIMEOUT_S", "9")
+    o = Options.from_env()
+    assert o.measure == "top_k"
+    assert o.bucketing is True
+    assert o.policy.timeout_s == 9.0
+
+
+def test_no_env_reads_outside_options_from_env():
+    """Acceptance: no kernel (or the codegen layer) consults a REPRO_*
+    env var directly -- the tuning env surface is Options.from_env()."""
+    import pathlib
+
+    import repro.core.codegen_pallas as cg
+    import repro.kernels as kpkg
+
+    files = list(pathlib.Path(kpkg.__path__[0]).glob("*.py"))
+    files.append(pathlib.Path(cg.__file__))
+    for f in files:
+        src = f.read_text()
+        assert "environ" not in src and "getenv" not in src, \
+            f"{f.name} reads env vars directly; route through Options"
+
+
+def test_legacy_kwargs_and_options_produce_identical_plans(tmp_path):
+    p = dse.gemm_program(256, 256, 256)
+    kw = dict(vmem_budget=VMEM_BYTES // 2, max_points=512,
+              depths=(2, 3))
+    a = dse.explore(p, cache=False, **kw)
+    b = dse.explore(p, options=Options(cache=False, **kw))
+    assert a.sizes == b.sizes
+    assert a.depths == b.depths
+    assert a.traffic_words == b.traffic_words
+
+
+# ------------------------------------------------------------ bucket ladder
+def test_bucket_extent_ladder():
+    # {s*2^j, s*3*2^(j-1)}: powers of two plus their 1.5x midpoints
+    assert [buckets.bucket_extent(n, sublane=8)
+            for n in (1, 8, 9, 24, 25, 100, 128, 129, 200)] \
+        == [8, 8, 16, 24, 32, 128, 128, 192, 256]
+    # sublane floor: a bf16 bucket is never below 16 rows
+    assert buckets.bucket_extent(3, sublane=16) == 16
+    for n in range(1, 2000, 37):
+        b = buckets.bucket_extent(n, sublane=8)
+        assert b >= n and b % 8 == 0
+
+
+def test_tile_family_ignores_extents():
+    kw = dict(vmem_budget=VMEM_BYTES, align=128)
+    f1 = buckets.tile_family(dse.gemm_program(256, 256, 256), **kw)
+    f2 = buckets.tile_family(dse.gemm_program(120, 512, 384), **kw)
+    f3 = buckets.tile_family(dse.attention_program(256, 256, 64), **kw)
+    assert f1 == f2          # same pattern structure, any shape
+    assert f1 != f3          # different pattern structure
+
+
+# --------------------------------------------------- round-trip + warm start
+def _tuned_cache(tmp_path, shape=(256, 256, 256)):
+    """A TuningCache holding one tuned gemm donor (bucketing on)."""
+    tc = TuningCache(path=str(tmp_path / "bucketed.json"))
+    plan = dse.explore(dse.gemm_program(*shape),
+                       options=Options(cache=tc, bucketing=True))
+    buckets.drain()
+    return tc, plan
+
+
+def test_bucket_index_round_trips_through_cache(tmp_path):
+    tc, plan = _tuned_cache(tmp_path)
+    fam = buckets.tile_family(dse.gemm_program(256, 256, 256),
+                              vmem_budget=VMEM_BYTES, align=128)
+    entries = tc.bucket_entries(fam)
+    assert len(entries) == 1
+    (sig, entry), = entries.items()
+    assert entry["kind"] == "tile"
+    assert dse.TilePlan.from_json(entry["plan"]).sizes == plan.sizes
+    # reload from disk: the index rides the persistent document
+    tc2 = TuningCache(path=tc.path)
+    assert tc2.bucket_entries(fam) == entries
+
+
+def test_cold_shape_warm_starts_with_zero_foreground_lowering(
+        tmp_path, monkeypatch):
+    """A cold shape in a tuned bucket is served the donor's re-fitted
+    plan immediately: no kernel lowering, no candidate enumeration --
+    exactly one analytic pricing of the fitted plan."""
+    tc, _ = _tuned_cache(tmp_path)
+    from repro.core import codegen_pallas, measure
+
+    def _boom(*a, **k):
+        raise AssertionError("foreground lowering during warm start")
+
+    monkeypatch.setattr(codegen_pallas, "lower_for_timing", _boom)
+    monkeypatch.setattr(measure, "timed", _boom, raising=False)
+    scheduled = []
+    monkeypatch.setattr(buckets, "schedule_retune",
+                        lambda tag, *a, **k: scheduled.append(tag))
+    calls = []
+    real_price = dse.price
+    monkeypatch.setattr(
+        dse, "price",
+        lambda *a, **k: calls.append(1) or real_price(*a, **k))
+
+    buckets.reset_stats()
+    # 250 is not on the donor grid but buckets to 256
+    warm = dse.explore(dse.gemm_program(250, 256, 256),
+                       options=Options(cache=tc, bucketing=True))
+    assert warm.warm_start
+    assert warm.bucket == "gemm=256x256;gemm_k=256"
+    assert len(calls) == 1                  # priced, never enumerated
+    assert scheduled and scheduled[0].startswith("tile|")
+    assert buckets.stats()["warm_hits"] == 1
+    # the loaned plan is usable: divisor tiles of the cold shape
+    for name, extents in (("gemm", (250, 256)), ("gemm_k", (256,))):
+        for tile, extent in zip(warm.sizes[name], extents):
+            assert extent % tile == 0
+
+
+def test_background_retune_promotes_certified_winner(tmp_path):
+    tc, _ = _tuned_cache(tmp_path)
+    buckets.reset_stats()
+    p = dse.gemm_program(250, 256, 256)
+    warm = dse.explore(p, options=Options(cache=tc, bucketing=True))
+    assert warm.warm_start
+    buckets.drain()
+    s = buckets.stats()
+    assert s["retunes"] == 1 and s["promotions"] == 1
+    assert s["retune_failures"] == 0
+    # the promoted exact-shape winner is now a plain cache hit
+    again = dse.explore(p, options=Options(cache=tc, bucketing=True))
+    assert again.cached and not again.warm_start
+    assert buckets.stats()["exact_hits"] == 1
+    assert buckets.hit_rate() == 1.0
+
+
+def test_uncertified_retune_is_discarded(tmp_path, monkeypatch):
+    """A background winner that fails certification is never promoted:
+    the cache keeps no entry for the exact shape and the failure is
+    counted + recorded, not raised."""
+    tc, _ = _tuned_cache(tmp_path)
+    monkeypatch.setattr(
+        resilience, "certify_tile_plan",
+        lambda *a, **k: (False, "forced miscompare (test)"))
+    buckets.reset_stats()
+    resilience.LOG.reset()
+    p = dse.gemm_program(250, 256, 256)
+    warm = dse.explore(p, options=Options(cache=tc, bucketing=True))
+    assert warm.warm_start
+    buckets.drain()
+    s = buckets.stats()
+    assert s["promotions"] == 0 and s["retune_failures"] == 1
+    # still only warm-startable -- no exact entry was written
+    again = dse.explore(p, options=Options(cache=tc, bucketing=True))
+    assert again.warm_start and not again.cached
+    assert any(e.stage == "retune" for e in resilience.LOG.events())
+
+
+def test_warm_start_plans_never_persist(tmp_path):
+    tc, _ = _tuned_cache(tmp_path)
+    warm = dse.explore(dse.gemm_program(250, 256, 256),
+                       options=Options(cache=tc, bucketing=True))
+    assert warm.warm_start
+    js = warm.to_json()
+    assert "warm_start" not in js and "bucket" not in js
+    rt = dse.TilePlan.from_json(js)
+    assert rt.warm_start is False and rt.bucket == ""
+    buckets.drain()
+
+
+def test_pipeline_bucket_warm_start_round_trip(tmp_path):
+    tc = TuningCache(path=str(tmp_path / "pipe.json"))
+    opts = Options(cache=tc, bucketing=True)
+    donor = dse.explore_pipeline(dse.filter_fold_pipeline(4096),
+                                 options=opts)
+    buckets.drain()
+    buckets.reset_stats()
+    warm = dse.explore_pipeline(dse.filter_fold_pipeline(4000),
+                                options=opts)
+    assert warm.warm_start and warm.fused
+    assert warm.depths == (donor.depths[0],)
+    assert 4000 % warm.block == 0
+    buckets.drain()
+    assert buckets.stats()["promotions"] == 1
+
+
+# ----------------------------------------------- numerical equivalence
+def test_warm_started_kernel_matches_exact_oracle(tmp_path,
+                                                  monkeypatch):
+    """The kernel running under a warm-start plan (and its
+    padded-to-bucket variant) computes the same numbers as the
+    exact-shape oracle."""
+    from repro.kernels import matmul as mm
+    from repro.kernels import ops
+
+    tc_path = str(tmp_path / "mm.json")
+    monkeypatch.setenv("REPRO_DSE_CACHE", tc_path)
+    opts = Options(bucketing=True)
+    dse.explore(dse.gemm_program(256, 256, 256),
+                options=Options(cache=tc_path, bucketing=True))
+    buckets.drain()
+    ops.clear_plan_memo()
+
+    rng = np.random.RandomState(0)
+    x = rng.randn(250, 256).astype(np.float32)
+    y = rng.randn(256, 256).astype(np.float32)
+    oracle = x @ y
+
+    got = np.asarray(mm.matmul(x, y, auto_tile=True, options=opts))
+    np.testing.assert_allclose(got, oracle, rtol=2e-5, atol=2e-5)
+
+    # padded-to-bucket: run at the bucket extent, slice back
+    xp = np.zeros((256, 256), np.float32)
+    xp[:250] = x
+    padded = np.asarray(mm.matmul(xp, y, auto_tile=True,
+                                  options=opts))[:250]
+    np.testing.assert_allclose(padded, oracle, rtol=2e-5, atol=2e-5)
+    buckets.drain()
+
+
+def test_resolve_plan_memoizes_but_not_warm_starts(tmp_path):
+    from repro.kernels import ops
+
+    tc_path = str(tmp_path / "memo.json")
+    opts = Options(cache=tc_path, bucketing=True)
+    dse.explore(dse.gemm_program(256, 256, 256), options=opts)
+    buckets.drain()
+    ops.clear_plan_memo()
+
+    _, p1 = ops.resolve_plan("gemm", 250, 256, 256, options=opts)
+    assert p1.warm_start
+    buckets.drain()         # background promotion lands
+    _, p2 = ops.resolve_plan("gemm", 250, 256, 256, options=opts)
+    # not memoized while warm: the promoted exact plan is picked up
+    assert not p2.warm_start and p2.cached
+    _, p3 = ops.resolve_plan("gemm", 250, 256, 256, options=opts)
+    assert p3 is p2          # steady state memoizes
