@@ -1,4 +1,5 @@
-"""CI perf-regression gate on modeled HBM traffic (pipeline fusion).
+"""CI perf-regression gate on modeled HBM traffic (pipeline fusion +
+serving paged decode).
 
 Compares a fresh ``BENCH_<rev>.json`` (``benchmarks/run.py --json``)
 against the committed ``benchmarks/baseline_traffic.json`` and fails
@@ -105,6 +106,12 @@ def serving_notes(rows: List[Dict]) -> List[str]:
         elif name == "serving/background_promotions":
             notes.append(f"serving background re-tunes: "
                          f"{r.get('derived')}")
+        elif name.startswith("serving/decode_ms_per_token/"):
+            notes.append(f"serving decode {name.rsplit('/', 1)[1]}: "
+                         f"{r.get('derived')}")
+        elif name == "serving/continuous_occupancy":
+            notes.append(f"serving continuous-batching occupancy: "
+                         f"{r.get('derived')}")
         elif "cold_us" in r:
             shape = name.split("/", 1)[1]
             notes.append(
@@ -132,6 +139,64 @@ def extract_traffic(rows: List[Dict]) -> Dict[str, Dict[str, float]]:
         elif label == "traffic_ratio" and "traffic_ratio" in r:
             entry["ratio"] = float(r["traffic_ratio"])
     return {k: v for k, v in out.items() if "fused" in v}
+
+
+def extract_decode(rows: List[Dict]) -> Dict[str, float]:
+    """``serving/decode_*`` rows -> modeled decode-traffic summary
+    (plain/paged words + ratio) and ms/token row presence flags."""
+    out: Dict[str, float] = {}
+    for r in rows:
+        name = r.get("name", "")
+        if name == "serving/decode_traffic/plain":
+            out["plain"] = float(r["traffic_words"])
+        elif name == "serving/decode_traffic/paged":
+            out["paged"] = float(r["traffic_words"])
+            if "traffic_ratio" in r:
+                out["ratio"] = float(r["traffic_ratio"])
+        elif name.startswith("serving/decode_ms_per_token/"):
+            out[f"has_{name.rsplit('/', 1)[1]}_ms"] = 1.0
+    return out
+
+
+def compare_decode(baseline: Dict[str, float], fresh: Dict[str, float],
+                   tolerance: float = DEFAULT_TOLERANCE
+                   ) -> Tuple[List[str], List[str]]:
+    """(failures, notes) for the serving paged-decode gate: the
+    modeled paged decode traffic must not grow, the dense/paged
+    traffic win must not erode, and the ms/token rows must keep being
+    emitted (coverage, not value -- wall times are machine-noisy)."""
+    failures: List[str] = []
+    notes: List[str] = []
+    if not baseline:
+        if fresh:
+            notes.append(
+                "serving decode rows present but baseline has no "
+                "serving_decode section -- refresh the baseline to "
+                "start gating paged decode traffic")
+        return failures, notes
+    if not fresh:
+        failures.append(
+            "serving decode rows present in baseline but missing from "
+            "the fresh benchmark (coverage loss)")
+        return failures, notes
+    if "paged" in baseline and "paged" in fresh \
+            and fresh["paged"] > baseline["paged"] * (1.0 + tolerance):
+        failures.append(
+            f"serving paged decode traffic regressed "
+            f"{baseline['paged']:.0f} -> {fresh['paged']:.0f} words "
+            f"(> {tolerance:.0%} over baseline)")
+    if "ratio" in baseline and "ratio" in fresh \
+            and fresh["ratio"] < baseline["ratio"] * (1.0 - tolerance):
+        failures.append(
+            f"serving dense/paged traffic win eroded "
+            f"{baseline['ratio']:.2f}x -> {fresh['ratio']:.2f}x "
+            f"(> {tolerance:.0%} below baseline)")
+    for key in ("has_plain_ms", "has_paged_ms"):
+        if baseline.get(key) and not fresh.get(key):
+            failures.append(
+                f"serving/decode_ms_per_token/"
+                f"{key[4:-3]} row disappeared (coverage loss)")
+    return failures, notes
 
 
 def compare(baseline: Dict[str, Dict[str, float]],
@@ -166,14 +231,21 @@ def compare(baseline: Dict[str, Dict[str, float]],
     return failures, notes
 
 
-def write_baseline(path: str, fresh: Dict[str, Dict[str, float]]) -> None:
+def write_baseline(path: str, fresh: Dict[str, Dict[str, float]],
+                   decode: Dict[str, float] = None) -> None:
     doc = {"pipelines": {k: {kk: (int(vv) if kk != "ratio" else vv)
                              for kk, vv in sorted(v.items())}
                          for k, v in sorted(fresh.items())}}
+    if decode:
+        doc["serving_decode"] = {
+            k: (v if k == "ratio" else int(v))
+            for k, v in sorted(decode.items())}
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")
-    print(f"wrote baseline for {len(fresh)} pipelines to {path}")
+    print(f"wrote baseline for {len(fresh)} pipelines"
+          + (" + serving decode traffic" if decode else "")
+          + f" to {path}")
 
 
 def main(argv=None) -> int:
@@ -197,22 +269,29 @@ def main(argv=None) -> int:
               f"({doc['error']}); rows are partial", file=sys.stderr)
         return 1
     fresh = extract_traffic(doc.get("rows", []))
+    fresh_decode = extract_decode(doc.get("rows", []))
     if args.write_baseline:
         if not fresh:
             print("no fused/* traffic rows in the benchmark json",
                   file=sys.stderr)
             return 1
-        write_baseline(args.write_baseline, fresh)
+        write_baseline(args.write_baseline, fresh, fresh_decode)
         return 0
 
     with open(args.baseline) as f:
-        baseline = json.load(f)["pipelines"]
+        base_doc = json.load(f)
+    baseline = base_doc["pipelines"]
     if not fresh:
         print("REGRESSION GATE: no fused/* traffic rows in the fresh "
               "benchmark json (did the fused section run?)",
               file=sys.stderr)
         return 1
     failures, notes = compare(baseline, fresh, args.tolerance)
+    dec_failures, dec_notes = compare_decode(
+        base_doc.get("serving_decode", {}), fresh_decode,
+        args.tolerance)
+    failures.extend(dec_failures)
+    notes.extend(dec_notes)
     for n in notes:
         print(f"note: {n}")
     if failures:

@@ -642,6 +642,55 @@ def serving():
          "and promoted",
          promotions=st["promotions"], retunes=st["retunes"],
          retune_failures=st["retune_failures"])
+    serving_decode()
+
+
+def serving_decode():
+    """Decode ms/token plain (grouped dense caches) vs paged
+    (continuous batching over the paged pool, fused Pallas decode),
+    plus the *modeled* decode HBM traffic of the same mixed-length
+    trace under both cache disciplines and the continuous-batching
+    slot occupancy.  Traffic rows are deterministic (analytic model
+    over the trace) and gated by check_regression.py; ms/token rows
+    are reported for visibility."""
+    from repro.launch import serve as serve_mod
+
+    lens = (3, 5, 9, 4, 6)
+    gen, slots = 5, 3
+    plain_stats = {}
+    serve_mod.serve("granite-3-2b", True, len(lens), 8, gen,
+                    prompt_lens=lens, stats_out=plain_stats)
+    _, cont = serve_mod.serve_continuous("granite-3-2b", True, slots,
+                                         gen, prompt_lens=lens)
+
+    emit("serving/decode_ms_per_token/plain",
+         plain_stats["ms_per_token"] * 1e3,
+         f"{plain_stats['ms_per_token']:.1f}ms/token "
+         f"(grouped dense caches)",
+         ms_per_token=round(plain_stats["ms_per_token"], 3))
+    emit("serving/decode_ms_per_token/paged",
+         cont["ms_per_token"] * 1e3,
+         f"{cont['ms_per_token']:.1f}ms/token "
+         f"(layout={cont['layout']},page={cont['page_size']},"
+         f"pallas={cont['use_pallas']},certified={cont['certified']})",
+         ms_per_token=round(cont["ms_per_token"], 3),
+         layout=cont["layout"], page_size=cont["page_size"],
+         use_pallas=cont["use_pallas"], certified=cont["certified"])
+    dense_w = cont["modeled_dense_traffic_words"]
+    paged_w = cont["modeled_paged_traffic_words"]
+    emit("serving/decode_traffic/plain", 0, f"{dense_w} words "
+         "(dense lanes at max context)", traffic_words=dense_w)
+    emit("serving/decode_traffic/paged", 0,
+         f"{paged_w} words ({dense_w / max(paged_w, 1):.2f}x fewer: "
+         "live pages only)", traffic_words=paged_w,
+         traffic_ratio=round(dense_w / max(paged_w, 1), 3))
+    emit("serving/continuous_occupancy", 0,
+         f"{cont['occupancy']:.2f} "
+         f"({cont['requests']} requests over {cont['slots']} slots, "
+         f"{cont['steps']} steps)",
+         occupancy=round(cont["occupancy"], 3),
+         requests=cont["requests"], slots=cont["slots"],
+         steps=cont["steps"])
 
 
 def resilience_rows() -> None:

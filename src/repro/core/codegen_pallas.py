@@ -856,3 +856,154 @@ def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
     call = lower(tile(p, plan.sizes, vmem_budget_words=budget // 4))
     call.tile_plan = plan
     return call
+
+
+# --------------------------------------------------------------------
+# paged decode (serving): KV-append producer + flash-attention fold
+# --------------------------------------------------------------------
+
+
+def lower_paged_decode(*, batch: int, kv_heads: int, group: int,
+                       head_dim: int, page_size: int, n_pages_max: int,
+                       layout: str = "split",
+                       pages_per_step: int = 1) -> Callable:
+    """Emit the fused decode megakernel over a paged KV cache.
+
+    The ``decode_attention`` DAG lowered as one kernel per layer: the
+    KV-append producer writes the step's token into its page slot, then
+    the flash-attention fold streams the request's pages with online
+    softmax.  The streaming domain is *ragged* (``ir.RaggedExtent``):
+    the grid iterates the static page bound ``n_pages_max`` and
+    predicates in-kernel on the live ``seq_lens`` -- pages past the
+    length contribute exact zeros (mask to ``-1e30`` before the
+    running-max update), so the result is independent of whatever the
+    unallocated page-table tail points at.
+
+    Layouts: ``split`` takes/returns two pools ``(P, ps, Hkv, dh)``;
+    ``fused`` one head-interleaved pool ``(P, ps, 2*Hkv, dh)`` (K at
+    head ``2h``, V at ``2h+1``) whose page streams both operands of a
+    head in one burst.  Grid is ``(batch, kv_heads)``; the pool blocks
+    are whole-array and revisited (constant index map), the first grid
+    step seeds the output pool from the input, and every step appends
+    only its own ``(request, head)`` slice -- the TPU grid is
+    sequential, so appends never race the copy.
+
+    Returns ``call(q, new_k, new_v, pools, page_table, seq_lens) ->
+    (out, new_pools)`` with ``q`` ``(B, Hkv, group, dh)``, ``new_k`` /
+    ``new_v`` ``(B, Hkv, dh)`` (already rotated), ``out`` the f32
+    ``(B, Hkv, group, dh)`` attention output.
+    """
+    if layout not in ("split", "fused"):
+        raise ValueError(f"layout {layout!r}")
+    fused = layout == "fused"
+    ps, npm = page_size, n_pages_max
+    if npm % pages_per_step != 0:
+        raise ValueError(
+            f"pages_per_step {pages_per_step} must divide the static "
+            f"page bound {n_pages_max}")
+    NEG = -1e30
+    scale = head_dim ** -0.5
+
+    def kernel(q_ref, k_ref, v_ref, pt_ref, len_ref, *pool_refs):
+        n_pools = 1 if fused else 2
+        pools_in = pool_refs[:n_pools]
+        out_ref = pool_refs[n_pools]
+        pools_out = pool_refs[n_pools + 1:]
+        b = pl.program_id(0)
+        h = pl.program_id(1)
+
+        @pl.when((b == 0) & (h == 0))
+        def _seed():
+            for src, dst in zip(pools_in, pools_out):
+                dst[...] = src[...]
+
+        ln = len_ref[0]
+        page = pt_ref[0, pl.ds(ln // ps, 1)][0]
+        slot = ln % ps
+        kv_dt = pools_out[0].dtype
+        newk = k_ref[0, 0].astype(kv_dt)[None, None, None, :]
+        newv = v_ref[0, 0].astype(kv_dt)[None, None, None, :]
+        if fused:
+            pool = pools_out[0]
+            pool[pl.ds(page, 1), pl.ds(slot, 1), pl.ds(2 * h, 1), :] = newk
+            pool[pl.ds(page, 1), pl.ds(slot, 1),
+                 pl.ds(2 * h + 1, 1), :] = newv
+        else:
+            kp_, vp_ = pools_out
+            kp_[pl.ds(page, 1), pl.ds(slot, 1), pl.ds(h, 1), :] = newk
+            vp_[pl.ds(page, 1), pl.ds(slot, 1), pl.ds(h, 1), :] = newv
+
+        n_phys = pools_out[0].shape[0]
+        q = q_ref[0, 0].astype(jnp.float32)            # (group, dh)
+
+        def read_page(pid):
+            if fused:
+                pool = pools_out[0]
+                kpg = pool[pl.ds(pid, 1), :, pl.ds(2 * h, 1), :]
+                vpg = pool[pl.ds(pid, 1), :, pl.ds(2 * h + 1, 1), :]
+            else:
+                kpg = pools_out[0][pl.ds(pid, 1), :, pl.ds(h, 1), :]
+                vpg = pools_out[1][pl.ds(pid, 1), :, pl.ds(h, 1), :]
+            return (kpg.reshape(ps, head_dim).astype(jnp.float32),
+                    vpg.reshape(ps, head_dim).astype(jnp.float32))
+
+        def body(step, carry):
+            m, el, acc = carry
+            for j in range(pages_per_step):
+                p = step * pages_per_step + j
+                pid = jnp.clip(pt_ref[0, pl.ds(p, 1)][0], 0,
+                               n_phys - 1)
+                kpg, vpg = read_page(pid)
+                s_ = jnp.dot(q, kpg.T,
+                             preferred_element_type=jnp.float32) * scale
+                slotpos = p * ps + jax.lax.broadcasted_iota(
+                    jnp.int32, (1, ps), 1)
+                s_ = jnp.where(slotpos <= ln, s_, NEG)  # ragged predicate
+                m_new = jnp.maximum(m, s_.max(-1))
+                pexp = jnp.exp(s_ - m_new[:, None])
+                alpha = jnp.exp(m - m_new)
+                el = el * alpha + pexp.sum(-1)
+                acc = acc * alpha[:, None] + jnp.dot(
+                    pexp, vpg, preferred_element_type=jnp.float32)
+                m = m_new
+            return m, el, acc
+
+        m0 = jnp.full((group,), NEG, jnp.float32)
+        l0 = jnp.zeros((group,), jnp.float32)
+        a0 = jnp.zeros((group, head_dim), jnp.float32)
+        m, el, acc = jax.lax.fori_loop(0, npm // pages_per_step, body,
+                                       (m0, l0, a0))
+        # the step's own token is always live, so el > 0
+        out_ref[0, 0] = acc / el[:, None]
+
+    def pool_specs(pools):
+        return [pl.BlockSpec(tuple(p.shape),
+                             lambda b, h, _nd=p.ndim: (0,) * _nd)
+                for p in pools]
+
+    def call(q, new_k, new_v, pools, page_table, seq_lens):
+        pools = tuple(jnp.asarray(p) for p in pools)
+        in_specs = [
+            pl.BlockSpec((1, 1, group, head_dim),
+                         lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, head_dim), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, npm), lambda b, h: (b, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ] + pool_specs(pools)
+        out_specs = [
+            pl.BlockSpec((1, 1, group, head_dim),
+                         lambda b, h: (b, h, 0, 0)),
+        ] + pool_specs(pools)
+        out_shape = [jax.ShapeDtypeStruct(
+            (batch, kv_heads, group, head_dim), jnp.float32)] + \
+            [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in pools]
+        outs = pl.pallas_call(
+            kernel, grid=(batch, kv_heads), in_specs=in_specs,
+            out_specs=out_specs, out_shape=out_shape,
+            interpret=INTERPRET)(
+                q, new_k, new_v, jnp.asarray(page_table, jnp.int32),
+                jnp.asarray(seq_lens, jnp.int32), *pools)
+        return outs[0], tuple(outs[1:])
+
+    return call

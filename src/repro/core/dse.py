@@ -1870,3 +1870,164 @@ def select_fused_kmeans_blocks(
                             cache=cache, measure=measure, policy=policy,
                             options=options)
     return plan.block, plan
+
+
+# --------------------------------------------------------------------------
+# Paged serving decode: layout x page_size x block as joint DSE axes
+# --------------------------------------------------------------------------
+
+PAGED_LAYOUTS = ("split", "fused")   # split K/V pools vs head-interleaved
+PAGE_SIZES = (8, 16, 32, 64)
+
+
+def paged_decode_pipeline(max_len: int, page_size: int, d: int,
+                          layout: str = "split"):
+    """One decode step as the ``decode_attention`` pipeline DAG: a
+    KV-append producer Map (merge the step's token at the ``seq_len``
+    slot) feeding a flash-attention MultiFold terminal, over a *ragged*
+    streaming domain (``ir.RaggedExtent``): the static extent is the
+    page-padded context bound, the live extent the runtime ``seq_len``
+    scalar, masked at page granularity.
+
+    ``layout`` picks the KV stream shape the candidate prices:
+    ``split`` streams separate K and V rows through two producer
+    stages; ``fused`` streams one head-interleaved ``2d`` row through a
+    single stage (half the streams, double the row width) -- same total
+    words, different stream count / stage structure, which is exactly
+    what the metapipeline model differentiates.
+    """
+    import jax.numpy as jnp
+
+    from .pipeline import Pipeline
+
+    if layout not in PAGED_LAYOUTS:
+        raise ValueError(f"layout {layout!r}; one of {PAGED_LAYOUTS}")
+    padded = -(-max_len // page_size) * page_size
+    rag = ir.RaggedExtent(max=padded, length_name="seq_len",
+                          granularity=page_size)
+    q = ir.Tensor("q", (1, d))
+    seq_len = ir.Tensor("seq_len", (1,), "int32")
+    scale = d ** -0.5
+
+    def append_fn(s, pagerow, new, ln):
+        pagerow = jnp.reshape(pagerow, (-1,))
+        new = jnp.reshape(new, (-1,))
+        return jnp.where(s[0] == jnp.reshape(ln, ()), new, pagerow)
+
+    if layout == "fused":
+        pages = ir.Tensor("kv_pages", (padded, 2 * d))
+        new_kv = ir.Tensor("new_kv", (1, 2 * d))
+        append = ir.Map(
+            domain=(padded,), elem_shape=(2 * d,),
+            reads=(ir.Access(pages, lambda i: (i, 0), (1, 2 * d)),
+                   ir.whole(new_kv), ir.whole(seq_len)),
+            fn=append_fn, name="pd_append", ragged=rag)
+
+        def fold_fn(s, acc, kvrow, qv, ln):
+            kvrow = jnp.reshape(kvrow, (-1,))
+            qv = jnp.reshape(qv, (-1,))
+            w = jnp.where(s[0] <= jnp.reshape(ln, ()),
+                          jnp.exp(jnp.sum(qv * kvrow[:d]) * scale), 0.0)
+            return acc + w * kvrow[d:]
+
+        fold = ir.MultiFold(
+            domain=(padded,), range_shape=(d,),
+            init=lambda: jnp.zeros((d,)),
+            reads=(ir.Access(ir.Tensor("pd_append", (padded, 2 * d)),
+                             lambda i: (i, 0), (1, 2 * d)),
+                   ir.whole(q), ir.whole(seq_len)),
+            out_index_map=lambda i: (0,), update_shape=(d,),
+            fn=fold_fn, combine=lambda a, b: a + b, name="pd_kv",
+            ragged=rag)
+        return Pipeline(name="paged_decode_fused",
+                        stages=(append, fold))
+
+    k_pages = ir.Tensor("k_pages", (padded, d))
+    v_pages = ir.Tensor("v_pages", (padded, d))
+    new_k = ir.Tensor("new_k", (1, d))
+    new_v = ir.Tensor("new_v", (1, d))
+    app_k = ir.Map(
+        domain=(padded,), elem_shape=(d,),
+        reads=(ir.Access(k_pages, lambda i: (i, 0), (1, d)),
+               ir.whole(new_k), ir.whole(seq_len)),
+        fn=append_fn, name="pd_append_k", ragged=rag)
+    app_v = ir.Map(
+        domain=(padded,), elem_shape=(d,),
+        reads=(ir.Access(v_pages, lambda i: (i, 0), (1, d)),
+               ir.whole(new_v), ir.whole(seq_len)),
+        fn=append_fn, name="pd_append_v", ragged=rag)
+
+    def fold_fn_split(s, acc, krow, vrow, qv, ln):
+        krow = jnp.reshape(krow, (-1,))
+        vrow = jnp.reshape(vrow, (-1,))
+        qv = jnp.reshape(qv, (-1,))
+        w = jnp.where(s[0] <= jnp.reshape(ln, ()),
+                      jnp.exp(jnp.sum(qv * krow) * scale), 0.0)
+        return acc + w * vrow
+
+    fold = ir.MultiFold(
+        domain=(padded,), range_shape=(d,),
+        init=lambda: jnp.zeros((d,)),
+        reads=(ir.Access(ir.Tensor("pd_append_k", (padded, d)),
+                         lambda i: (i, 0), (1, d)),
+               ir.Access(ir.Tensor("pd_append_v", (padded, d)),
+                         lambda i: (i, 0), (1, d)),
+               ir.whole(q), ir.whole(seq_len)),
+        out_index_map=lambda i: (0,), update_shape=(d,),
+        fn=fold_fn_split, combine=lambda a, b: a + b, name="pd_kv",
+        ragged=rag)
+    return Pipeline(name="paged_decode_split",
+                    stages=(app_k, app_v, fold))
+
+
+def select_paged_decode_blocks(
+        max_len: int, d: int, *, vmem_budget: Optional[int] = None,
+        align: Optional[int] = None,
+        cache: Union[None, bool, str, TuningCache] = None,
+        measure: Optional[str] = None,
+        policy: Optional[resilience.Policy] = None,
+        options: Optional[Options] = None
+        ) -> Tuple[Tuple[str, int, int, int], TilePlan]:
+    """Joint search over KV layout x page size x streaming block x
+    metapipeline depth for the fused paged-decode kernel.
+
+    Every (layout, page_size) pair prices its own ``decode_attention``
+    proxy DAG through ``explore_pipeline`` (block x depth inside, with
+    the pipeline tuning cache and -- via ``options.bucketing`` -- the
+    shape-bucket warm-start layer, bucketed on the padded max length);
+    the argmin on modeled seconds wins.  Returns ``((layout,
+    page_size, block, depth), plan)`` with ``plan`` a summary
+    ``TilePlan`` whose provenance records the searched joint axes:
+    ``sizes["pd_kv"]`` the streaming block, ``sizes["pd_page"]`` the
+    page size, ``sizes["pd_layout"]`` the layout's ``PAGED_LAYOUTS``
+    index, ``depths["pd_kv"]`` the buffer depth.
+    """
+    page_sizes = [p for p in PAGE_SIZES if p <= max(max_len, PAGE_SIZES[0])]
+    best = None
+    explored = pruned = timed = 0
+    for layout in PAGED_LAYOUTS:
+        for ps in page_sizes:
+            pipe = paged_decode_pipeline(max_len, ps, d, layout)
+            plan = explore_pipeline(pipe, vmem_budget=vmem_budget,
+                                    align=align, cache=cache,
+                                    measure=measure, policy=policy,
+                                    options=options)
+            explored += plan.explored
+            pruned += plan.pruned
+            timed += plan.timed
+            if best is None or (plan.modeled_seconds
+                                < best[2].modeled_seconds):
+                best = (layout, ps, plan)
+    layout, ps, pplan = best
+    summary = TilePlan(
+        sizes={"pd_kv": (int(pplan.block),), "pd_page": (int(ps),),
+               "pd_layout": (PAGED_LAYOUTS.index(layout),)},
+        traffic_words=pplan.traffic_words,
+        vmem_bytes=pplan.vmem_bytes,
+        modeled_seconds=pplan.modeled_seconds,
+        explored=explored, pruned=pruned,
+        cached=pplan.cached, measured=pplan.measured,
+        measured_seconds=pplan.measured_seconds, timed=timed,
+        depths={"pd_kv": int(pplan.depth)},
+        warm_start=pplan.warm_start, bucket=pplan.bucket)
+    return (layout, int(ps), int(pplan.block), int(pplan.depth)), summary

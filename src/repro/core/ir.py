@@ -158,6 +158,30 @@ def elem(src: Source) -> Access:
 
 
 @dataclass(frozen=True)
+class RaggedExtent:
+    """A bounded-dynamic streaming extent (serving decode: per-request
+    ``seq_len``).
+
+    The pattern's static ``domain`` stays at the upper bound ``max`` --
+    tiling, memory planning and the grid all see a static extent -- but
+    at run time only the leading ``length_name`` elements are live.
+    Codegen keeps the static grid and predicates in-kernel (elements
+    past the length are masked); the cost model prices traffic at the
+    ``granularity``-rounded live extent instead of the bound (a paged
+    KV cache streams whole pages, so ``granularity`` = page size).
+    """
+
+    max: int
+    length_name: str       # runtime scalar input holding the live extent
+    granularity: int = 1   # mask granularity (page size); divides traffic
+
+    @property
+    def max_units(self) -> int:
+        """Upper bound in granularity units (static page-count grid)."""
+        return -(-self.max // self.granularity)
+
+
+@dataclass(frozen=True)
 class Pattern:
     """Base class; ``domain`` is the iteration space extent."""
 
@@ -195,6 +219,7 @@ class Map(Pattern):
     strided: bool = False  # True for grid (strip-mined outer) domains
     name: str = "map"
     dtype: str = "float32"
+    ragged: Optional[RaggedExtent] = None  # bounded-dynamic 1-D domain
 
     @property
     def shape(self) -> Tuple[int, ...]:
@@ -231,6 +256,7 @@ class MultiFold(Pattern):
     strided: bool = False
     name: str = "multifold"
     dtype: str = "float32"
+    ragged: Optional[RaggedExtent] = None  # bounded-dynamic 1-D domain
 
     @property
     def shape(self) -> Tuple[int, ...]:
@@ -380,6 +406,9 @@ def signature(p: Pattern) -> Tuple:
     if isinstance(p, GroupByFold):
         sig += (p.num_keys,)
     sig += (tuple((repr(tc)) for tc in p.loads),)
+    rag = getattr(p, "ragged", None)
+    if rag is not None:   # appended only when present: static-extent
+        sig += (("ragged", rag.max, rag.length_name, rag.granularity),)
     if p.inner is not None:
         sig += (signature(p.inner),)
     return sig

@@ -203,6 +203,17 @@ def output_words(pipe: Pipeline) -> int:
     return total
 
 
+def ragged_extent(pipe: Pipeline) -> Optional[ir.RaggedExtent]:
+    """The pipeline's shared ragged extent, or None when every stage
+    streams the full static domain (``validate`` already enforced that
+    all ragged stages agree)."""
+    for s in pipe.stages:
+        rag = getattr(s, "ragged", None)
+        if rag is not None:
+            return rag
+    return None
+
+
 def _is_stream_row_access(a: ir.Access, domain_rank: int) -> bool:
     """True iff the access reads the *current* row along the shared
     streaming domain (base 0, dim 0 advancing 1:1 with the index)."""
@@ -235,6 +246,26 @@ def validate(pipe: Pipeline) -> None:
                 f"stage '{s.name}' domain {s.domain} != shared ({n},)")
         if s.strided or s.loads:
             raise ValueError(f"stage '{s.name}' must be untiled")
+
+    # ragged streaming domains: every ragged stage must agree on the
+    # bound / length scalar / granularity (one live extent per stream),
+    # and the static bound must equal the shared domain
+    rags = {s.name: s.ragged for s in pipe.stages
+            if getattr(s, "ragged", None) is not None}
+    if rags:
+        uniq = set(rags.values())
+        if len(uniq) > 1:
+            raise ValueError(
+                f"pipeline '{pipe.name}' stages disagree on the ragged "
+                f"extent: {sorted(rags)}")
+        (rag,) = uniq
+        if rag.max != n:
+            raise ValueError(
+                f"ragged extent max={rag.max} != shared domain ({n},)")
+        if n % rag.granularity != 0:
+            raise ValueError(
+                f"ragged granularity {rag.granularity} must divide the "
+                f"shared domain {n}")
 
     # wiring: reads of stage-named Tensors must match the producer's
     # realized shape exactly (fan-out into a differently-shaped view

@@ -35,6 +35,7 @@ _SELECTORS = {
     "groupby": "select_groupby_blocks",
     "fused_filter_fold": "select_fused_filter_fold_blocks",
     "fused_kmeans": "select_fused_kmeans_blocks",
+    "paged_decode": "select_paged_decode_blocks",
 }
 
 _PLAN_MEMO: dict = {}
@@ -64,6 +65,7 @@ def resolve_plan(kind: str, *shape: int, measure: Optional[str] = None,
         key = (kind, shape, measure, policy, options)
         hit = _PLAN_MEMO.get(key)
     except TypeError:      # unhashable policy/options: skip the memo
+        key = None         # the tuple itself bound fine; only .get raised
         hit = None
     if hit is not None:
         return hit

@@ -115,6 +115,15 @@ def _scan_group(cfg: ModelConfig) -> int:
     return 1
 
 
+def _cost_analysis_dict(ca) -> Dict[str, Any]:
+    """Normalize ``compiled.cost_analysis()`` across jax versions:
+    0.4.x returns a list with one dict per program, newer versions the
+    dict itself."""
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca or {}
+
+
 def _lower_and_cost(cfg, shape, mesh, opt_compress,
                     microbatches: int = 1) -> Dict[str, Any]:
     """Lower+compile one configuration; return raw per-device costs."""
@@ -174,7 +183,7 @@ def _lower_and_cost(cfg, shape, mesh, opt_compress,
         "temp_bytes": int(ma.temp_size_in_bytes),
         "alias_bytes": int(ma.alias_size_in_bytes),
     }
-    ca = compiled.cost_analysis()
+    ca = _cost_analysis_dict(compiled.cost_analysis())
     rec["cost_per_device"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes_accessed": float(ca.get("bytes accessed", 0.0)),

@@ -11,13 +11,21 @@ from typing import Sequence
 
 import jax
 
+# jax >= 0.5 requires explicit axis types; older releases (the pinned
+# 0.4.x) have no ``jax.sharding.AxisType`` and reject the kwarg
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _axis_type_kwargs(n_axes: int) -> dict:
+    if _AXIS_TYPE is None:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * n_axes}
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_elastic_mesh(devices: Sequence, model_parallel: int = 16
@@ -32,5 +40,4 @@ def make_elastic_mesh(devices: Sequence, model_parallel: int = 16
     usable = data * model_parallel
     arr = np.asarray(devices[:usable]).reshape(data, model_parallel)
     return jax.sharding.Mesh(
-        arr, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        arr, ("data", "model"), **_axis_type_kwargs(2))

@@ -16,6 +16,14 @@ resolve through the shape-bucket layer (``core.buckets``): a cold
 prompt length whose bucket is already tuned is served a warm-start
 plan immediately (zero foreground lowering) while a bounded background
 re-tune promotes the certified exact-shape winner into the cache.
+
+``--continuous`` switches to continuous batching over a *paged* KV
+pool (``models.paged``): requests are admitted into and evicted from a
+fixed set of decode slots every step, decode runs as one joint
+``paged_decode_step`` (the fused ``decode_attention`` DAG), and the KV
+layout / page size come from the joint DSE plan.  The fused Pallas
+kernel is certified token-identical against the ``decode_step`` oracle
+before serving trusts it.
 """
 from __future__ import annotations
 
@@ -37,6 +45,8 @@ def _prefill(prefill_fn, params, cache, prompt, ring: int,
     """Prefill ``prompt`` into ``cache`` starting at ``index0``,
     chunking at the KV ring boundary (a block write must not wrap)."""
     plen = prompt.shape[1]
+    if plen == 0:
+        raise ValueError("cannot prefill a zero-length prompt")
     i, nxt = 0, None
     while i < plen:
         chunk = min(plen - i, ring - ((index0 + i) % ring))
@@ -54,12 +64,14 @@ def _ring_len(cfg, max_len: int) -> int:
     return max_len
 
 
-def _resolve_group_plans(cfg, lengths: Sequence[int], max_len: int
+def _resolve_group_plans(cfg, lengths: Sequence[int], gen: int
                          ) -> List[Dict]:
     """Resolve the DSE attention plan for each prompt-length group
     through the shape-bucket layer.  Returns per-group provenance:
     did the plan come from the exact tuning cache, a bucket warm
-    start, or a fresh exploration?"""
+    start, or a fresh exploration?  Each group runs with its own
+    ``ln + gen`` cache, so the KV extent is per group -- not the
+    global ``max(lens) + gen``."""
     from repro.core import buckets
     from repro.core.options import Options
     from repro.kernels import ops
@@ -69,7 +81,8 @@ def _resolve_group_plans(cfg, lengths: Sequence[int], max_len: int
     rows = []
     for plen in lengths:
         t0 = time.time()
-        _, plan = ops.resolve_plan("attention", int(plen), int(max_len),
+        _, plan = ops.resolve_plan("attention", int(plen),
+                                   int(plen + gen),
                                    int(head_dim), options=opts)
         rows.append({
             "prompt_len": int(plen),
@@ -87,17 +100,20 @@ def _resolve_group_plans(cfg, lengths: Sequence[int], max_len: int
 def serve(arch: str, smoke: bool, batch: int, prompt_len: int,
           gen: int, seed: int = 0,
           prompt_lens: Optional[Sequence[int]] = None,
-          bucketing: bool = False) -> np.ndarray:
+          bucketing: bool = False,
+          stats_out: Optional[Dict] = None) -> np.ndarray:
     """Serve ``batch`` requests; returns the (batch, gen) generated
     tokens (requests keep their input order even when mixed prompt
-    lengths are re-grouped internally)."""
+    lengths are re-grouped internally).  ``stats_out``, when given, is
+    filled with prefill/decode wall times (benchmark hook)."""
     cfg = get_config(arch, smoke=smoke)
     params = model.init_params(cfg, jax.random.PRNGKey(seed))
     lens = list(prompt_lens) if prompt_lens else [prompt_len] * batch
     if len(lens) != batch:
         raise ValueError(f"--prompt-lens gave {len(lens)} lengths for "
                          f"--batch {batch}")
-    max_len = max(lens) + gen
+    if min(lens) <= 0:
+        raise ValueError(f"prompt lengths must be positive: {lens}")
     prefill_fn = jax.jit(steps_mod.make_cache_prefill_step(cfg),
                          donate_argnums=(1,))
     step_fn = jax.jit(steps_mod.make_serve_step(cfg), donate_argnums=(1,))
@@ -114,7 +130,7 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int,
         groups.setdefault(ln, []).append(r)
 
     if bucketing:
-        for row in _resolve_group_plans(cfg, sorted(groups), max_len):
+        for row in _resolve_group_plans(cfg, sorted(groups), gen):
             print("plan:", row)
 
     out = np.zeros((batch, gen), np.int64)
@@ -151,7 +167,249 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int,
           f"{'s' if n_groups > 1 else ''}): {prefill_s:.2f}s; "
           f"decode {gen} tokens: {decode_s:.2f}s "
           f"({decode_s / max(gen, 1) * 1e3:.0f} ms/token)")
+    if stats_out is not None:
+        stats_out.update(prefill_s=prefill_s, decode_s=decode_s,
+                         ms_per_token=decode_s / max(batch * gen, 1)
+                         * 1e3)
     return out
+
+
+def _certify_paged_decode(cfg, params, *, layout: str, page_size: int,
+                          prompt_len: int = 5, gen: int = 4,
+                          seed: int = 0, policy=None
+                          ) -> Tuple[bool, str]:
+    """Certify the fused Pallas paged-decode kernel against the
+    ``model.decode_step`` oracle token-for-token: one short request is
+    decoded greedily through both paths (oracle dense cache sized to
+    the page-padded extent so the comparison is exact, not tolerance-
+    based).  Runs under the resilience policy's deadline/retry; any
+    expected failure or token mismatch returns ``(False, why)`` and
+    the caller falls back to the reference paged path."""
+    from repro.core import resilience
+    from repro.models import paged
+
+    def probe() -> Tuple[bool, str]:
+        ln = prompt_len
+        cmax = -(-(ln + gen) // page_size) * page_size
+        rng = np.random.RandomState(seed)
+        prompt = rng.randint(0, cfg.vocab, (1, ln))
+        oc = model.init_cache(cfg, 1, cmax)
+        pc = paged.PagedKVCache.init(cfg, 1, cmax, page_size=page_size,
+                                     layout=layout)
+        step_o = jax.jit(steps_mod.make_serve_step(cfg))
+
+        def pstep(params, cache, tok):
+            logits, cache = paged.paged_decode_step(
+                params, cfg, cache, tok, use_pallas=True)
+            logits = model.mask_vocab_pad(logits, cfg)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, cache
+
+        step_p = jax.jit(pstep)
+        to = tp = None
+        for i in range(ln + gen - 1):
+            tok_o = (prompt[:, i:i + 1] if i < ln
+                     else np.asarray(to).reshape(1, 1))
+            tok_p = (prompt[:, i:i + 1] if i < ln
+                     else np.asarray(tp).reshape(1, 1))
+            to, oc = step_o(params, oc,
+                            jnp.asarray(tok_o, jnp.int32), jnp.int32(i))
+            tp, pc = step_p(params, pc, jnp.asarray(tok_p, jnp.int32))
+            if i >= ln - 1 and int(np.asarray(to)[0]) != \
+                    int(np.asarray(tp)[0]):
+                return False, (f"token mismatch at step {i - ln + 1}: "
+                               f"oracle {int(np.asarray(to)[0])} != "
+                               f"fused {int(np.asarray(tp)[0])}")
+        return True, f"token-identical over {gen} decode steps"
+
+    key = f"paged_decode/{layout}/p{page_size}"
+    try:
+        return resilience.call_guarded(probe, stage="certify", key=key,
+                                       policy=policy)
+    except resilience.CandidateFailure as exc:
+        return False, f"{exc.kind}: {exc.detail}"
+
+
+def serve_continuous(arch: str, smoke: bool, slots: int, gen: int,
+                     seed: int = 0,
+                     prompt_lens: Optional[Sequence[int]] = None,
+                     prompt_len: int = 32,
+                     page_size: Optional[int] = None,
+                     layout: Optional[str] = None,
+                     use_pallas: bool = True, certify: bool = True,
+                     bucketing: bool = False
+                     ) -> Tuple[np.ndarray, Dict]:
+    """Continuous-batching serve over one shared paged KV pool.
+
+    ``slots`` concurrent decode lanes share a page pool; each decode
+    step first *admits* waiting requests into free slots (batch-1
+    dense prefill, then the prefilled K/V is scattered into freshly
+    allocated pages) and *evicts* finished ones (pages returned to the
+    free list), then runs ONE joint ``paged_decode_step`` over all
+    slots.  The KV layout and page size come from the joint DSE plan
+    (``ops.resolve_plan("paged_decode", ...)``) unless overridden; the
+    fused Pallas kernel is certified against the ``decode_step``
+    oracle first and serving falls back to the reference paged path on
+    any certification failure (recorded as a resilience event).
+
+    Returns ``(tokens, stats)``: the (n_requests, gen) generated
+    tokens in request order, and occupancy/latency/provenance stats.
+    """
+    from repro.core import resilience
+    from repro.core.options import Options
+    from repro.kernels import ops
+    from repro.models import paged
+
+    cfg = get_config(arch, smoke=smoke)
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"continuous paged serving supports dense/moe attention "
+            f"families, not {cfg.family}")
+    params = model.init_params(cfg, jax.random.PRNGKey(seed))
+    lens = list(prompt_lens) if prompt_lens else [prompt_len] * slots
+    if min(lens) <= 0:
+        raise ValueError(f"prompt lengths must be positive: {lens}")
+    n_req = len(lens)
+    head_dim = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
+    max_ctx = max(lens) + gen
+
+    # layout x page_size x block resolved jointly by the DSE (bucketed
+    # on the padded max length when --bucketing is on)
+    opts = Options(bucketing=True) if bucketing else None
+    (sel_layout, sel_ps, blk, depth), plan = ops.resolve_plan(
+        "paged_decode", int(max_ctx), int(head_dim), options=opts)
+    layout = layout or sel_layout
+    page_size = int(page_size or sel_ps)
+
+    certified = None
+    if use_pallas and certify:
+        ok, why = _certify_paged_decode(cfg, params, layout=layout,
+                                        page_size=page_size)
+        certified = ok
+        if not ok:
+            resilience.record(
+                "certify", "numeric",
+                f"paged_decode/{layout}/p{page_size}",
+                "fallback-reference", why)
+            use_pallas = False
+
+    npm = -(-max_ctx // page_size)
+    cache = paged.PagedKVCache.init(cfg, slots, npm * page_size,
+                                    page_size=page_size, layout=layout)
+    free_pages = list(range(cache.n_pages - 1, 0, -1))  # page 0 reserved
+    for s in range(slots):                              # park every slot
+        cache = cache.assign_pages(s, [0] * npm, 0)
+
+    prefill_fn = jax.jit(steps_mod.make_cache_prefill_step(cfg),
+                         donate_argnums=(1,))
+
+    def _step(params, cache, tok):
+        logits, cache = paged.paged_decode_step(params, cfg, cache, tok,
+                                                use_pallas=use_pallas)
+        logits = model.mask_vocab_pad(logits, cfg)
+        return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), cache
+
+    step_fn = jax.jit(_step, donate_argnums=(1,))
+
+    rng = np.random.RandomState(seed)
+    prompt_pool = rng.randint(0, cfg.vocab, (n_req, max(lens)))
+
+    from collections import deque
+    queue = deque(range(n_req))
+    slot_req: List[Optional[int]] = [None] * slots
+    slot_pages: List[List[int]] = [[] for _ in range(slots)]
+    slot_done = [0] * slots
+    next_tok = np.zeros(slots, np.int32)
+    out = np.zeros((n_req, gen), np.int64)
+    steps = active_steps = admitted = evicted = 0
+    prefill_s = decode_s = 0.0
+    dense_words = paged_words = 0   # modeled HBM traffic over the trace
+
+    from repro.core import cost as cost_mod
+    hkv = cfg.n_kv_heads
+
+    while queue or any(r is not None for r in slot_req):
+        for s in range(slots):                               # admit
+            if slot_req[s] is not None or not queue:
+                continue
+            r = queue[0]
+            ln = lens[r]
+            need = -(-(ln + gen) // page_size)
+            if len(free_pages) < need:
+                break
+            queue.popleft()
+            pages = [free_pages.pop() for _ in range(need)]
+            t0 = time.time()
+            dcache = model.init_cache(cfg, 1, ln)
+            prompt = jnp.asarray(prompt_pool[r:r + 1, :ln], jnp.int32)
+            first, dcache = _prefill(prefill_fn, params, dcache, prompt,
+                                     _ring_len(cfg, ln))
+            cache = cache.assign_pages(s, pages, ln)
+            cache = cache.write_tokens(s, dcache["k"][:, 0, :, :ln],
+                                       dcache["v"][:, 0, :, :ln], 0)
+            jax.block_until_ready(cache.buffers)
+            prefill_s += time.time() - t0
+            slot_req[s], slot_pages[s], slot_done[s] = r, pages, 0
+            next_tok[s] = int(np.asarray(first)[0])
+            admitted += 1
+
+        active = [s for s in range(slots) if slot_req[s] is not None]
+        # modeled decode traffic for THIS step: a dense continuous
+        # server sizes every lane's cache to the longest possible
+        # context, the paged pool streams only live pages
+        live = [lens[slot_req[s]] + slot_done[s] for s in active]
+        dense_words += cfg.n_layers * cost_mod.dense_decode_traffic_words(
+            len(active), max_ctx, hkv, head_dim)
+        paged_words += cfg.n_layers * cost_mod.paged_decode_traffic_words(
+            live, page_size, hkv, head_dim)
+        t0 = time.time()
+        nxt, cache = step_fn(params, cache,
+                             jnp.asarray(next_tok.reshape(slots, 1)))
+        nxt = np.asarray(nxt)
+        decode_s += time.time() - t0
+        steps += 1
+        active_steps += len(active)
+
+        # parked slots wrote their garbage token to reserved page 0;
+        # pin their lengths back to zero so they never walk off the
+        # page table
+        mask = np.zeros(slots, np.int32)
+        mask[active] = 1
+        cache = cache.replace(seq_lens=cache.seq_lens
+                              * jnp.asarray(mask))
+
+        for s in active:
+            r = slot_req[s]
+            out[r, slot_done[s]] = int(nxt[s])
+            next_tok[s] = nxt[s]
+            slot_done[s] += 1
+            if slot_done[s] == gen:                          # evict
+                free_pages.extend(slot_pages[s])
+                cache = cache.assign_pages(s, [0] * npm, 0)
+                slot_req[s], slot_pages[s] = None, []
+                evicted += 1
+
+    occupancy = active_steps / max(steps * slots, 1)
+    tokens_out = n_req * gen
+    stats = {
+        "layout": layout, "page_size": page_size, "block": int(blk),
+        "depth": int(depth), "plan_sizes": dict(plan.sizes),
+        "use_pallas": bool(use_pallas), "certified": certified,
+        "slots": slots, "requests": n_req, "steps": steps,
+        "occupancy": occupancy, "admitted": admitted,
+        "evicted": evicted, "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "ms_per_token": decode_s / max(tokens_out, 1) * 1e3,
+        "modeled_dense_traffic_words": int(dense_words),
+        "modeled_paged_traffic_words": int(paged_words),
+    }
+    print(f"continuous serve: {n_req} requests over {slots} slots, "
+          f"{steps} steps, occupancy {occupancy:.2f}; "
+          f"layout={layout} page_size={page_size} "
+          f"pallas={use_pallas} certified={certified}; "
+          f"decode {decode_s:.2f}s "
+          f"({stats['ms_per_token']:.1f} ms/token)")
+    return out, stats
 
 
 def _parse_lens(text: Optional[str]) -> Optional[Tuple[int, ...]]:
@@ -173,10 +431,31 @@ def main():
     ap.add_argument("--bucketing", action="store_true",
                     help="resolve tuning plans through the shape-bucket "
                          "warm-start layer and print their provenance")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over a paged KV pool: "
+                         "--batch is the slot count, --prompt-lens the "
+                         "request trace (admit/evict per decode step)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="override the DSE-selected KV page size "
+                         "(--continuous only)")
+    ap.add_argument("--layout", choices=("split", "fused"), default=None,
+                    help="override the DSE-selected KV layout "
+                         "(--continuous only)")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="use the reference paged attention instead of "
+                         "the fused Pallas kernel (--continuous only)")
     args = ap.parse_args()
-    toks = serve(args.arch, args.smoke, args.batch, args.prompt_len,
-                 args.gen, prompt_lens=_parse_lens(args.prompt_lens),
-                 bucketing=args.bucketing)
+    if args.continuous:
+        toks, _ = serve_continuous(
+            args.arch, args.smoke, args.batch, args.gen,
+            prompt_lens=_parse_lens(args.prompt_lens),
+            prompt_len=args.prompt_len, page_size=args.page_size,
+            layout=args.layout, use_pallas=not args.no_pallas,
+            bucketing=args.bucketing)
+    else:
+        toks = serve(args.arch, args.smoke, args.batch, args.prompt_len,
+                     args.gen, prompt_lens=_parse_lens(args.prompt_lens),
+                     bucketing=args.bucketing)
     print("generated token block:", toks.shape)
 
 

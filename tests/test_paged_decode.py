@@ -1,0 +1,216 @@
+"""Paged serving decode on the pattern substrate (ISSUE 9).
+
+The load-bearing claim: ``paged_decode_step`` -- page-scattered KV,
+per-request ragged lengths, both KV layouts, reference and fused
+Pallas paths -- is *token-identical* to the ``model.decode_step``
+oracle, across mixed lengths and page-boundary crossings.  Plus the
+regression tests for the three seam bugfixes this PR rode in on
+(mesh ``AxisType`` guard, ``resolve_plan`` unhashable-key memo,
+dry-run ``cost_analysis`` normalization) and the DSE provenance of
+the new joint layout x page_size x block axes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import ir
+from repro.core.pipeline import Pipeline, ragged_extent
+from repro.kernels import ops
+from repro.models import model, paged
+
+ARCH = "granite-3-2b"
+LENS = (3, 5, 9)      # crosses page boundaries at 4 and 8 (ps=4)
+PS = 4
+GEN = 5
+
+
+def _greedy(logits, cfg):
+    logits = model.mask_vocab_pad(logits, cfg)
+    return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+
+def _decode_tokens_oracle(cfg, params, prompt, gen, cmax):
+    """Greedy tokens from ``model.decode_step`` with a dense no-wrap
+    cache of the page-padded extent (== the paged gather extent, so
+    the comparison is bit-exact, not tolerance-based)."""
+    cache = model.init_cache(cfg, 1, cmax)
+    out, nxt = [], None
+    ln = prompt.shape[1]
+    for i in range(ln + gen):
+        tok = (prompt[:, i:i + 1] if i < ln
+               else np.asarray(nxt).reshape(1, 1))
+        logits, cache = model.decode_step(params, cfg, cache,
+                                          jnp.asarray(tok, jnp.int32),
+                                          jnp.int32(i))
+        nxt = _greedy(logits, cfg)
+        if i >= ln:
+            out.append(int(np.asarray(nxt)[0]))
+    return out
+
+
+def _decode_tokens_paged(cfg, params, prompt, gen, cmax, layout,
+                         use_pallas):
+    cache = paged.PagedKVCache.init(cfg, 1, cmax, page_size=PS,
+                                    layout=layout)
+
+    @jax.jit
+    def step(params, cache, tok):
+        logits, cache = paged.paged_decode_step(params, cfg, cache, tok,
+                                                use_pallas=use_pallas)
+        return _greedy(logits, cfg), cache
+
+    out, nxt = [], None
+    ln = prompt.shape[1]
+    for i in range(ln + gen):
+        tok = (prompt[:, i:i + 1] if i < ln
+               else np.asarray(nxt).reshape(1, 1))
+        nxt, cache = step(params, cache, jnp.asarray(tok, jnp.int32))
+        if i >= ln:
+            out.append(int(np.asarray(nxt)[0]))
+    return out
+
+
+@pytest.mark.parametrize("layout", paged.LAYOUTS)
+def test_cache_scatter_gather_roundtrip(layout):
+    """``write_tokens`` then ``gather_dense`` is an exact permutation
+    round-trip for both KV layouts (including the head-interleaved
+    fused packing: K at even head index, V at odd)."""
+    cfg = get_config(ARCH, smoke=True)
+    cmax = 3 * PS
+    cache = paged.PagedKVCache.init(cfg, 2, cmax, page_size=PS,
+                                    layout=layout)
+    rng = np.random.RandomState(0)
+    shp = (cfg.n_layers, cfg.n_kv_heads, 7, cfg.head_dim)
+    k = jnp.asarray(rng.randn(*shp), cache.buffers[0].dtype)
+    v = jnp.asarray(rng.randn(*shp), cache.buffers[0].dtype)
+    cache = cache.assign_pages(1, [3, 5, 1], 7)   # non-linear page map
+    cache = cache.write_tokens(1, k, v, 0)
+    for li in range(cfg.n_layers):
+        ck, cv = cache.gather_dense(li)
+        np.testing.assert_array_equal(np.asarray(ck[1, :, :7], np.float32),
+                                      np.asarray(k[li], np.float32))
+        np.testing.assert_array_equal(np.asarray(cv[1, :, :7], np.float32),
+                                      np.asarray(v[li], np.float32))
+
+
+@pytest.mark.parametrize("layout", paged.LAYOUTS)
+def test_paged_decode_token_identical_to_oracle(layout):
+    """Reference AND fused-Pallas paged decode match the dense-cache
+    oracle token-for-token: mixed prompt lengths, page-boundary
+    crossings, both KV layouts."""
+    cfg = get_config(ARCH, smoke=True)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    cmax = -(-(max(LENS) + GEN) // PS) * PS
+    rng = np.random.RandomState(1)
+    for ln in LENS:
+        prompt = rng.randint(0, cfg.vocab, (1, ln))
+        want = _decode_tokens_oracle(cfg, params, prompt, GEN, cmax)
+        got_ref = _decode_tokens_paged(cfg, params, prompt, GEN, cmax,
+                                       layout, use_pallas=False)
+        got_pl = _decode_tokens_paged(cfg, params, prompt, GEN, cmax,
+                                      layout, use_pallas=True)
+        assert got_ref == want, f"reference path diverged at ln={ln}"
+        assert got_pl == want, f"pallas path diverged at ln={ln}"
+
+
+def test_paged_decode_dse_axes_in_provenance():
+    """KV layout, page size, streaming block and buffer depth are
+    jointly searched axes, recorded in the plan's provenance."""
+    (layout, ps, block, depth), plan = ops.resolve_plan(
+        "paged_decode", 48, 16)
+    assert layout in paged.LAYOUTS
+    assert plan.sizes["pd_layout"] == (paged.LAYOUTS.index(layout),)
+    assert plan.sizes["pd_page"] == (ps,)
+    assert plan.sizes["pd_kv"] == (block,)
+    assert plan.depths["pd_kv"] == depth
+    assert plan.traffic_words > 0 and plan.modeled_seconds > 0
+
+
+def test_ragged_extent_on_pipeline_stages():
+    """Ragged streaming domains validate (shared extent, granularity
+    divides it) and change the stage signature -- so plans for ragged
+    and dense variants of the same DAG never collide in the cache."""
+    from repro.core import dse
+
+    pipe = dse.paged_decode_pipeline(12, 4, 8, "fused")
+    rag = ragged_extent(pipe)
+    assert rag is not None and rag.granularity == 4
+    assert rag.max == 12 and rag.max_units == 3
+    dense_like = [s for s in pipe.stages if s.ragged is None]
+    assert not dense_like
+    no_rag = ir.Map(domain=pipe.stages[0].domain,
+                    elem_shape=pipe.stages[0].elem_shape,
+                    reads=pipe.stages[0].reads,
+                    fn=pipe.stages[0].fn, name=pipe.stages[0].name)
+    assert ir.signature(pipe.stages[0]) != ir.signature(no_rag)
+
+    bad = ir.RaggedExtent(max=12, length_name="seq_len", granularity=5)
+    with pytest.raises(ValueError):
+        Pipeline(name="bad", stages=(
+            ir.Map(domain=(12,), elem_shape=(), reads=no_rag.reads,
+                   fn=no_rag.fn, name="m", ragged=bad),)).validate()
+
+
+def test_resolve_plan_survives_unhashable_memo_key():
+    """Regression (ISSUE 9 satellite): an unhashable policy/options
+    must skip the in-process memo, not crash the resolve -- and the
+    second resolve must return the same plan."""
+    b1, _ = ops.resolve_plan("paged_decode", 16, 8,
+                             policy={"unhashable": True})
+    b2, _ = ops.resolve_plan("paged_decode", 16, 8,
+                             policy={"unhashable": True})
+    assert b1 == b2
+
+
+def test_mesh_axis_type_guard():
+    """Regression (ISSUE 9 satellite): mesh construction works with
+    and without ``jax.sharding.AxisType`` (the jax-version seam that
+    broke the dry-run subprocess cell)."""
+    from repro.launch import mesh as mesh_mod
+
+    kw = mesh_mod._axis_type_kwargs(2)
+    if mesh_mod._AXIS_TYPE is None:
+        assert kw == {}
+    else:
+        assert len(kw["axis_types"]) == 2
+    old = mesh_mod._AXIS_TYPE
+    try:
+        mesh_mod._AXIS_TYPE = None
+        assert mesh_mod._axis_type_kwargs(3) == {}
+    finally:
+        mesh_mod._AXIS_TYPE = old
+
+
+def test_dryrun_cost_analysis_normalization():
+    """Regression (ISSUE 9 satellite): ``cost_analysis()`` results are
+    normalized whether jax returns a per-program list (0.4.x) or the
+    dict itself (newer)."""
+    from repro.launch.dryrun import _cost_analysis_dict
+
+    assert _cost_analysis_dict([{"flops": 1.0}]) == {"flops": 1.0}
+    assert _cost_analysis_dict([]) == {}
+    assert _cost_analysis_dict({"flops": 2.0}) == {"flops": 2.0}
+    assert _cost_analysis_dict(None) == {}
+
+
+def test_paged_rejects_sliding_window_and_recurrent():
+    cfg = get_config(ARCH, smoke=True)
+    import dataclasses
+    swcfg = dataclasses.replace(cfg, sliding_window=4)
+    with pytest.raises(NotImplementedError):
+        paged.PagedKVCache.init(swcfg, 1, 8, page_size=4)
+
+
+def test_decode_traffic_model_prefers_live_pages():
+    """The modeled paged decode traffic charges live pages only, so a
+    ragged batch undercuts the dense max-context accounting."""
+    from repro.core import cost
+
+    dense = cost.dense_decode_traffic_words(3, 64, 2, 16)
+    pg = cost.paged_decode_traffic_words([5, 9, 33], 8, 2, 16)
+    assert pg < dense
+    # page granularity: 9 live tokens pay for 2 pages of 8
+    one = cost.paged_decode_traffic_words([9], 8, 2, 16)
+    assert one == 2 * 2 * 8 * 2 * 16 + 3 * 2 * 16

@@ -82,3 +82,76 @@ def test_serve_mixed_prompt_lengths_preserve_order():
                         prompt_lens=(6, 4, 6))
     assert mixed.shape == (3, 2)
     np.testing.assert_array_equal(mixed[[0, 2]], uniform[[0, 2]])
+
+
+def test_resolve_group_plans_use_per_group_extent(monkeypatch):
+    """Regression (ISSUE 9): each prompt-length group's attention plan
+    resolves at ITS OWN KV extent ``ln + gen``, not the global
+    ``max(lens) + gen`` every group used to be priced at."""
+    from repro.kernels import ops
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    calls = []
+
+    def fake_resolve(kind, *shape, **kw):
+        calls.append((kind, shape))
+
+        class P:
+            warm_start, bucket, cached, sizes = False, "", False, {}
+        return (None, P())
+
+    monkeypatch.setattr(ops, "resolve_plan", fake_resolve)
+    serve._resolve_group_plans(cfg, [4, 6], gen=2)
+    hd = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
+    assert calls == [("attention", (4, 6, hd)),
+                     ("attention", (6, 8, hd))]
+
+
+def test_zero_length_prompts_rejected():
+    """Regression (ISSUE 9): a zero-length prompt must fail loudly at
+    validation, not prefill garbage."""
+    with pytest.raises(ValueError, match="positive"):
+        serve.serve("granite-3-2b", True, 3, 6, 2,
+                    prompt_lens=(6, 0, 6))
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    prefill = jax.jit(steps.make_cache_prefill_step(cfg))
+    empty = jnp.zeros((1, 0), jnp.int32)
+    with pytest.raises(ValueError, match="zero-length"):
+        serve._prefill(prefill, params, model.init_cache(cfg, 1, 4),
+                       empty, 4)
+
+
+def test_serve_continuous_matches_oracle_per_request():
+    """Continuous batching over the paged pool (admit/evict churn,
+    more requests than slots, fused Pallas decode, certification on)
+    returns every request's tokens in input order, token-identical to
+    a per-request dense-cache oracle decode."""
+    lens, gen, slots = (3, 5, 9, 4), 3, 2
+    toks, stats = serve.serve_continuous("granite-3-2b", True, slots,
+                                         gen, prompt_lens=lens)
+    assert toks.shape == (len(lens), gen)
+    assert stats["certified"] is True and stats["use_pallas"]
+    assert stats["admitted"] == stats["evicted"] == len(lens)
+    assert 0 < stats["occupancy"] <= 1
+    assert 0 < stats["modeled_paged_traffic_words"] \
+        < stats["modeled_dense_traffic_words"]
+
+    cfg = get_config("granite-3-2b", smoke=True)
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    pool = rng.randint(0, cfg.vocab, (len(lens), max(lens)))
+    cmax = -(-(max(lens) + gen) // stats["page_size"]) \
+        * stats["page_size"]
+    step = jax.jit(steps.make_serve_step(cfg))
+    for r, ln in enumerate(lens):
+        cache = model.init_cache(cfg, 1, cmax)
+        nxt, want = None, []
+        for i in range(ln + gen):
+            tok = (pool[r:r + 1, i:i + 1] if i < ln
+                   else np.asarray(nxt).reshape(1, 1))
+            nxt, cache = step(params, cache,
+                              jnp.asarray(tok, jnp.int32), jnp.int32(i))
+            if i >= ln:
+                want.append(int(np.asarray(nxt)[0]))
+        assert list(toks[r]) == want, f"request {r} diverged"
