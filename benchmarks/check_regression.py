@@ -78,6 +78,7 @@ def timing_notes(doc: Dict) -> List[str]:
                 "measured rows taken with repeat < 3: medians may be "
                 "noisy; prefer --repeat 3+ before trusting rankings")
     notes.extend(serving_notes(doc.get("rows", [])))
+    notes.extend(accuracy_notes(doc))
     res = (doc.get("resilience") or {}).get("counts") or {}
     if res:
         # degradation is tolerated, never hidden: a run that
@@ -89,6 +90,28 @@ def timing_notes(doc: Dict) -> List[str]:
         if faults:
             notes.append(f"fault injection was active: "
                          f"REPRO_FAULTS={faults}")
+    return notes
+
+
+def accuracy_notes(doc: Dict) -> List[str]:
+    """Cost-model accuracy gauges from the unified telemetry registry
+    (``core.telemetry``, merged into the BENCH json by run.py): mean
+    predicted-vs-measured relative drift and Spearman rank correlation
+    per pattern family -- printed next to the gate verdicts so model
+    quality is visible wherever traffic is gated."""
+    notes: List[str] = []
+    gauges = (doc.get("telemetry") or {}).get("gauges") or {}
+    drift = {k.rsplit(".", 1)[1]: v for k, v in sorted(gauges.items())
+             if k.startswith("model.drift.")}
+    rho = {k.rsplit(".", 1)[1]: v for k, v in sorted(gauges.items())
+           if k.startswith("model.spearman.")}
+    for fam in sorted(set(drift) | set(rho)):
+        parts = []
+        if fam in drift:
+            parts.append(f"drift={drift[fam] * 100:.0f}%")
+        if fam in rho:
+            parts.append(f"spearman={rho[fam]:+.2f}")
+        notes.append(f"cost-model accuracy [{fam}]: " + ", ".join(parts))
     return notes
 
 

@@ -1,0 +1,105 @@
+"""CI trace-smoke validator for the Chrome-trace export.
+
+``benchmarks/run.py`` under ``REPRO_TRACE=1`` writes a
+``TRACE_<rev>.json`` next to the BENCH json (``core.telemetry``'s
+Chrome trace-event format, loadable in https://ui.perfetto.dev).  This
+script asserts the export is structurally sound:
+
+  * the file parses as JSON and has a ``traceEvents`` list;
+  * at least one complete ("ph": "X") span named ``dse.explore`` is
+    present -- the DSE ran and was traced;
+  * every event carries numeric non-negative ``ts`` (and ``dur`` for
+    "X" events), and the timed events are in non-decreasing ``ts``
+    order (the exporter sorts them; a violation means a clock bug).
+
+Exit 0 on a valid trace, 1 with a diagnostic otherwise.
+
+Usage:
+  python benchmarks/check_trace.py bench-artifacts/TRACE_*.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+
+def load_trace(path_or_glob: str) -> Dict:
+    paths = glob.glob(path_or_glob) or [path_or_glob]
+    newest = max(paths, key=lambda p: os.path.getmtime(p)
+                 if os.path.exists(p) else 0)
+    with open(newest) as f:
+        return json.load(f)
+
+
+def validate(doc: Dict) -> List[str]:
+    """List of problems; empty == valid."""
+    problems: List[str] = []
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        return ["no traceEvents list in the document"]
+    if not events:
+        return ["traceEvents is empty"]
+
+    spans = [e for e in events if e.get("ph") == "X"]
+    explores = [e for e in spans if e.get("name") == "dse.explore"]
+    if not explores:
+        problems.append(
+            f"no complete ('ph': 'X') span named dse.explore among "
+            f"{len(spans)} spans -- was REPRO_TRACE=1 set for the "
+            f"benchmark run?")
+
+    last_ts = None
+    for i, e in enumerate(events):
+        if "ts" not in e:
+            if e.get("ph") != "M":    # metadata events carry no clock
+                problems.append(f"event {i} ({e.get('name')!r}) has "
+                                f"no ts")
+            continue
+        ts = e["ts"]
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"event {i} ({e.get('name')!r}) has bad "
+                            f"ts {ts!r}")
+            continue
+        if e.get("ph") == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"span {i} ({e.get('name')!r}) has "
+                                f"bad dur {dur!r}")
+        if last_ts is not None and ts < last_ts:
+            problems.append(
+                f"timestamps not monotone: event {i} "
+                f"({e.get('name')!r}) ts={ts} after ts={last_ts}")
+            break
+        last_ts = ts
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="TRACE_<rev>.json path or glob")
+    args = ap.parse_args(argv)
+    try:
+        doc = load_trace(args.trace)
+    except (OSError, ValueError) as e:
+        print(f"TRACE CHECK FAILED: cannot load {args.trace}: {e}",
+              file=sys.stderr)
+        return 1
+    problems = validate(doc)
+    if problems:
+        print(f"TRACE CHECK FAILED ({len(problems)}):", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    events = doc["traceEvents"]
+    spans = sum(1 for e in events if e.get("ph") == "X")
+    print(f"trace OK: {len(events)} events ({spans} spans, "
+          f">=1 dse.explore), timestamps monotone")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

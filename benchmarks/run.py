@@ -75,7 +75,7 @@ import numpy as np
 
 from repro.core import ir
 from repro.core import measure as measure_mod
-from repro.core import resilience
+from repro.core import resilience, telemetry
 from repro.core.codegen_jax import execute
 from repro.core.cost import traffic
 from repro.core.scheduling import build_schedule, model_speedup
@@ -143,12 +143,23 @@ def write_json(out: str, error: str = "") -> str:
                "counts": resilience.LOG.counts(),
                "faults": os.environ.get("REPRO_FAULTS", ""),
                "events": [e.to_json()
-                          for e in resilience.LOG.events()[:200]]}}
+                          for e in resilience.LOG.events()[:200]]},
+           # unified metrics registry: counters (bucket/cache hits),
+           # gauges (model drift / Spearman per family), histograms
+           # (serving latency) -- the regression gate prints the
+           # model-accuracy gauges next to its verdicts
+           "telemetry": telemetry.metrics_snapshot()}
     if error:
         doc["error"] = error
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
     print(f"wrote {len(JSON_ROWS)} rows to {path}")
+    if telemetry.enabled():
+        tpath = os.path.join(os.path.dirname(path) or ".",
+                             f"TRACE_{rev}.json")
+        telemetry.export_trace(tpath)
+        print(f"wrote trace ({len(telemetry.span_log())} spans) to "
+              f"{tpath} -- load in https://ui.perfetto.dev")
     return path
 
 

@@ -44,7 +44,7 @@ import math
 import threading
 from typing import Callable, Dict, Optional, Tuple
 
-from . import ir, resilience
+from . import ir, resilience, telemetry
 
 # ---------------------------------------------------------------- buckets
 
@@ -303,11 +303,36 @@ STATS.update(_zero())
 def note(kind: str) -> None:
     with _LOCK:
         STATS[kind] = STATS.get(kind, 0) + 1
+    # mirror into the unified metrics registry (always on): the BENCH
+    # json and serving stats read bucket activity from telemetry
+    telemetry.count(f"bucket.{kind}")
 
 
 def stats() -> Dict[str, int]:
     with _LOCK:
         return dict(STATS)
+
+
+def snapshot() -> Dict[str, int]:
+    """Point-in-time copy of the counters, for per-call deltas: the
+    process-wide ``STATS`` survive across serve invocations, so any
+    hit rate quoted for *one* call must diff two snapshots
+    (``delta``), not read the globals."""
+    return stats()
+
+
+def delta(before: Dict[str, int]) -> Dict[str, int]:
+    """Per-key counter growth since ``before`` (a ``snapshot()``)."""
+    now = stats()
+    return {k: now.get(k, 0) - before.get(k, 0)
+            for k in set(now) | set(before)}
+
+
+def delta_hit_rate(d: Dict[str, int]) -> float:
+    """``hit_rate`` over one ``delta()`` window; 0.0 on no lookups."""
+    served = d.get("exact_hits", 0) + d.get("warm_hits", 0)
+    total = served + d.get("misses", 0)
+    return served / total if total else 0.0
 
 
 def hit_rate() -> float:
@@ -341,29 +366,36 @@ def schedule_retune(tag: str, retune: Callable[[], object], *,
             return None
         _INFLIGHT.add(tag)
         STATS["retunes"] += 1
+    telemetry.count("bucket.retunes")
 
     def worker() -> None:
-        try:
-            if policy.timeout_s:
-                plan = resilience.run_with_deadline(
-                    retune, policy.timeout_s, label=f"retune:{tag}")
-            else:
-                plan = retune()
-            ok, reason = certify(plan)
-            if not ok:
+        # the daemon thread gets its own lane in the exported trace
+        # (the span records this thread's name/ident)
+        with telemetry.span("buckets.retune", tag=tag) as sp:
+            try:
+                if policy.timeout_s:
+                    plan = resilience.run_with_deadline(
+                        retune, policy.timeout_s, label=f"retune:{tag}")
+                else:
+                    plan = retune()
+                ok, reason = certify(plan)
+                if not ok:
+                    note("retune_failures")
+                    sp.set(outcome="certify-failed")
+                    resilience.record("retune", "certify-failed", tag,
+                                      "discarded", reason)
+                    return
+                promote(plan)
+                note("promotions")
+                sp.set(outcome="promoted")
+            except resilience.EXPECTED_ERRORS as e:
                 note("retune_failures")
-                resilience.record("retune", "certify-failed", tag,
-                                  "discarded", reason)
-                return
-            promote(plan)
-            note("promotions")
-        except resilience.EXPECTED_ERRORS as e:
-            note("retune_failures")
-            resilience.record("retune", resilience.classify(e), tag,
-                              "abandoned", str(e))
-        finally:
-            with _LOCK:
-                _INFLIGHT.discard(tag)
+                sp.set(outcome="abandoned")
+                resilience.record("retune", resilience.classify(e), tag,
+                                  "abandoned", str(e))
+            finally:
+                with _LOCK:
+                    _INFLIGHT.discard(tag)
 
     t = threading.Thread(target=worker, daemon=True,
                          name=f"repro-retune-{tag[:24]}")

@@ -184,6 +184,8 @@ def fit(samples: Sequence[Sample], *, device: Optional[str] = None,
     the rank-quality guard above picks scale-only when the affine
     model orders the fitted candidates worse.
     """
+    from . import telemetry
+
     # canonical sample order: the fit is bit-for-bit reproducible for
     # the same sample *set*, whatever order callers accumulated it in
     samples = sorted(samples,
@@ -194,6 +196,17 @@ def fit(samples: Sequence[Sample], *, device: Optional[str] = None,
         raise ValueError("calibrate.fit: no samples")
     device = device or device_kind()
     version = _model_version() if model_version is None else model_version
+    with telemetry.span("calibrate.fit", n_samples=len(samples),
+                        device=device) as sp:
+        prof = _fit_body(samples, device, version)
+        sp.set(mode=prof.mode, mean_abs_err_s=prof.mean_abs_err_s)
+    telemetry.gauge("calibrate.n_samples", len(samples))
+    telemetry.gauge("calibrate.mean_abs_err_s", prof.mean_abs_err_s)
+    return prof
+
+
+def _fit_body(samples: Sequence[Sample], device: str,
+              version: int) -> CalibrationProfile:
 
     kinds = sorted({s.kind for s in samples})
     col = {k: 1 + i for i, k in enumerate(kinds)}

@@ -32,7 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from . import ir, resilience
+from . import ir, resilience, telemetry
 from .affine import AffineMap
 
 INTERPRET = True  # container is CPU-only; flip on real TPU
@@ -579,11 +579,20 @@ def lower_fused_dag(terminals, grid_n: int, depth: int = 2) -> Callable:
     HBM is touched solely at the pipeline edges (paper Fig. 6).
     Returns ``call(**tensors) -> {name: array}``.
     """
+    terminals = tuple(terminals)
+    # the span times kernel *construction* (host side); the emitted
+    # kernel body stays telemetry-free
+    with telemetry.span("codegen.lower_fused_dag",
+                        terminals=len(terminals), grid=int(grid_n),
+                        depth=int(depth)):
+        return _lower_fused_dag_body(terminals, grid_n, depth)
+
+
+def _lower_fused_dag_body(terminals, grid_n: int, depth: int) -> Callable:
     from jax.experimental.pallas import tpu as pltpu
 
     if depth < 2:
         raise ValueError(f"metapipeline depth must be >= 2, got {depth}")
-    terminals = tuple(terminals)
     for _, t in terminals:
         if not (t.strided and len(t.domain) == 1 and t.inner is not None):
             raise NotImplementedError(
@@ -747,18 +756,24 @@ def lower_fused_pipeline(pipe, *, plan=None,
 
 def lower(p: ir.Pattern) -> Callable:
     """Pick the template for a tiled pattern (paper: template selection)."""
-    if match_tiled_gemm(p):
-        return lower_tiled_gemm(p)
-    if isinstance(p, ir.MultiFold) and p.combine is None \
-            and isinstance(p.inner, ir.Map):
-        return lower_tiled_map(p)
-    if isinstance(p, ir.GroupByFold) and p.strided:
-        return lower_tiled_groupby(p)
-    if isinstance(p, ir.FlatMap) and p.strided:
-        return lower_tiled_flatmap(p)
-    raise NotImplementedError(
-        f"no hardware template for {type(p).__name__} (strided="
-        f"{p.strided}); supported: tiled Map/GEMM/GroupByFold/FlatMap")
+    with telemetry.span("codegen.lower", kind=type(p).__name__,
+                        pattern=p.name) as sp:
+        if match_tiled_gemm(p):
+            sp.set(template="gemm")
+            return lower_tiled_gemm(p)
+        if isinstance(p, ir.MultiFold) and p.combine is None \
+                and isinstance(p.inner, ir.Map):
+            sp.set(template="map")
+            return lower_tiled_map(p)
+        if isinstance(p, ir.GroupByFold) and p.strided:
+            sp.set(template="groupby")
+            return lower_tiled_groupby(p)
+        if isinstance(p, ir.FlatMap) and p.strided:
+            sp.set(template="flatmap")
+            return lower_tiled_flatmap(p)
+        raise NotImplementedError(
+            f"no hardware template for {type(p).__name__} (strided="
+            f"{p.strided}); supported: tiled Map/GEMM/GroupByFold/FlatMap")
 
 
 def lower_for_timing(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
@@ -784,28 +799,33 @@ def lower_for_timing(p: ir.Pattern, sizes: Dict[str, Tuple[int, ...]], *,
     # chaos hook: REPRO_FAULTS=lower:<p> fails this lowering before any
     # fallback can mask it -- the caller's quarantine path must fire
     resilience.inject("lower", f"{type(p).__name__}:{p.name}")
-    try:
-        t = tile(p, sizes, vmem_budget_words=budget // 4)
-    except resilience.EXPECTED_ERRORS:
-        # same fallback as dse._tile_ir: interchange/lift may not apply
-        t = insert_tile_copies(strip_mine(p, sizes),
-                               vmem_budget_words=budget // 4)
-    inputs = synth_inputs(ir.inputs_of(p), seed=seed)
-    try:
-        kern = lower(t)
-        # abstract-trace probe: template-shape mismatches that only
-        # surface at call time must route to the oracle, not blow up
-        # (or silently skip) the candidate
-        jax.eval_shape(lambda: kern(**inputs))
-        return (lambda: kern(**inputs)), "pallas"
-    except resilience.EXPECTED_ERRORS as e:
-        resilience.record_once(
-            "lower", resilience.classify(e),
-            f"{type(p).__name__}:{p.name}", "fallback",
-            f"pallas template unusable ({e}); codegen_jax oracle of "
-            "the tiled IR times instead")
-        run = jax.jit(lambda **kw: execute(t, kw))
-        return (lambda: run(**inputs)), "oracle"
+    with telemetry.span("codegen.lower_for_timing",
+                        kind=type(p).__name__, pattern=p.name) as sp:
+        try:
+            t = tile(p, sizes, vmem_budget_words=budget // 4)
+        except resilience.EXPECTED_ERRORS:
+            # same fallback as dse._tile_ir: interchange/lift may not
+            # apply
+            t = insert_tile_copies(strip_mine(p, sizes),
+                                   vmem_budget_words=budget // 4)
+        inputs = synth_inputs(ir.inputs_of(p), seed=seed)
+        try:
+            kern = lower(t)
+            # abstract-trace probe: template-shape mismatches that only
+            # surface at call time must route to the oracle, not blow up
+            # (or silently skip) the candidate
+            jax.eval_shape(lambda: kern(**inputs))
+            sp.set(how="pallas")
+            return (lambda: kern(**inputs)), "pallas"
+        except resilience.EXPECTED_ERRORS as e:
+            resilience.record_once(
+                "lower", resilience.classify(e),
+                f"{type(p).__name__}:{p.name}", "fallback",
+                f"pallas template unusable ({e}); codegen_jax oracle of "
+                "the tiled IR times instead")
+            run = jax.jit(lambda **kw: execute(t, kw))
+            sp.set(how="oracle")
+            return (lambda: run(**inputs)), "oracle"
 
 
 def lower_pipeline_for_timing(pipe, plan, *,
@@ -821,8 +841,12 @@ def lower_pipeline_for_timing(pipe, plan, *,
 
     # chaos hook mirroring the single-pattern path
     resilience.inject("lower", f"Pipeline:{pipe.name}")
-    inputs = synth_inputs(plmod.external_inputs(pipe), seed=seed)
-    call = lower_fused_pipeline(pipe, plan=plan, vmem_budget=vmem_budget)
+    with telemetry.span("codegen.lower_pipeline_for_timing",
+                        pipeline=pipe.name, block=int(plan.block),
+                        depth=int(plan.depth)):
+        inputs = synth_inputs(plmod.external_inputs(pipe), seed=seed)
+        call = lower_fused_pipeline(pipe, plan=plan,
+                                    vmem_budget=vmem_budget)
     return lambda: call(**inputs)
 
 
@@ -850,10 +874,13 @@ def lower_auto(p: ir.Pattern, *, plan=None, vmem_budget: Optional[int] = None,
     from .strip_mine import tile
 
     budget = VMEM_BYTES if vmem_budget is None else vmem_budget
-    if plan is None:
-        plan = explore(p, vmem_budget=budget, cache=cache,
-                       measure=measure, policy=policy, options=options)
-    call = lower(tile(p, plan.sizes, vmem_budget_words=budget // 4))
+    with telemetry.span("codegen.lower_auto", kind=type(p).__name__,
+                        pattern=p.name):
+        if plan is None:
+            plan = explore(p, vmem_budget=budget, cache=cache,
+                           measure=measure, policy=policy,
+                           options=options)
+        call = lower(tile(p, plan.sizes, vmem_budget_words=budget // 4))
     call.tile_plan = plan
     return call
 
@@ -895,6 +922,22 @@ def lower_paged_decode(*, batch: int, kv_heads: int, group: int,
     """
     if layout not in ("split", "fused"):
         raise ValueError(f"layout {layout!r}")
+    # span times host-side kernel construction; nothing lands in the
+    # traced/jitted kernel body
+    with telemetry.span("codegen.lower_paged_decode", layout=layout,
+                        batch=int(batch), page_size=int(page_size),
+                        n_pages_max=int(n_pages_max)):
+        return _lower_paged_decode_body(
+            batch=batch, kv_heads=kv_heads, group=group,
+            head_dim=head_dim, page_size=page_size,
+            n_pages_max=n_pages_max, layout=layout,
+            pages_per_step=pages_per_step)
+
+
+def _lower_paged_decode_body(*, batch: int, kv_heads: int, group: int,
+                             head_dim: int, page_size: int,
+                             n_pages_max: int, layout: str,
+                             pages_per_step: int) -> Callable:
     fused = layout == "fused"
     ps, npm = page_size, n_pages_max
     if npm % pages_per_step != 0:

@@ -51,7 +51,7 @@ import os
 from typing import Dict, List, Optional, Tuple, Union
 
 
-from . import calibrate, ir, resilience
+from . import calibrate, ir, resilience, telemetry
 from . import measure as measure_mod
 from .cost import HBM_BYTES_PER_S, VMEM_BYTES, stream_seconds, traffic
 from .memory import plan_memory
@@ -149,6 +149,7 @@ class TilePlan:
     depths: Dict[str, int] = dataclasses.field(default_factory=dict)
     warm_start: bool = False  # adapted from a tuned bucket (core.buckets)
     bucket: str = ""          # donor bucket signature (warm starts only)
+    key: str = ""             # tuning-cache key (dse.explain provenance)
 
     @property
     def depth(self) -> int:
@@ -168,6 +169,7 @@ class TilePlan:
             "measured": bool(self.measured),
             "measured_seconds": float(self.measured_seconds),
             "timed": int(self.timed),
+            "key": str(self.key),
         }
 
     @classmethod
@@ -184,6 +186,7 @@ class TilePlan:
                    measured=bool(d.get("measured", False)),
                    measured_seconds=float(d.get("measured_seconds", 0.0)),
                    timed=int(d.get("timed", 0)),
+                   key=str(d.get("key", "")),
                    cached=True)
 
 
@@ -741,6 +744,24 @@ def _time_candidates(p: ir.Pattern, top: List[Priced], *,
     return out
 
 
+def _accuracy_gauges(kind: str, pairs: List[Tuple[float, float]]) -> None:
+    """Model-accuracy gauges per pattern family, from one measured
+    shortlist's (calibrated prediction, measured median) pairs:
+    ``model.drift.<kind>`` the mean relative |predicted - measured| /
+    measured, ``model.spearman.<kind>`` the rank correlation of the
+    analytic ordering against the measured one.  Always-on (gauges are
+    cheap scalars): ``benchmarks/check_regression.py`` prints them next
+    to the gate output without needing ``REPRO_TRACE``."""
+    if not pairs:
+        return
+    drift = sum(abs(p - m) / max(m, 1e-12) for p, m in pairs) / len(pairs)
+    telemetry.gauge(f"model.drift.{kind}", drift)
+    if len(pairs) >= 2:
+        telemetry.gauge(f"model.spearman.{kind}",
+                        measure_mod.spearman([p for p, _ in pairs],
+                                             [m for _, m in pairs]))
+
+
 def _observe(p_kind: str, workload: str,
              timings: List[CandidateTiming]) -> None:
     samples = [calibrate.Sample(
@@ -751,6 +772,24 @@ def _observe(p_kind: str, workload: str,
         for t in timings]
     if samples:
         calibrate.observe(samples)
+    _accuracy_gauges(p_kind, [(t.calibrated_seconds,
+                               t.measurement.median_s)
+                              for t in timings])
+
+
+def _record_plan(plan, *, source: str, **extra) -> None:
+    """Stash a plan's exploration provenance for ``explain`` (tracing
+    only; the record store is a bounded LRU in ``core.telemetry``).
+    Merges into any existing record under the same key: a cache hit
+    updates ``source`` without losing the original exploration's rank
+    tables, and a warm start's ``retune_tag`` survives the background
+    re-tune recording its own exploration under the promoted key."""
+    if not telemetry.enabled() or not plan.key:
+        return
+    prev = telemetry.get_record("plan", plan.key)
+    payload = dict(prev) if isinstance(prev, dict) else {}
+    payload.update({"source": source, **extra})
+    telemetry.put_record("plan", plan.key, payload)
 
 
 def measured_shortlist(p: ir.Pattern, *,
@@ -858,6 +897,14 @@ def explore(p: ir.Pattern, *,
                          timing_db=timing_db, profile=profile,
                          warmup=warmup, repeat=repeat, depths=depths,
                          policy=policy, bucketing=bucketing)
+    if o.trace:
+        telemetry.enable()
+    with telemetry.span("dse.explore", kind=type(p).__name__,
+                        pattern=p.name) as sp:
+        return _explore_body(p, space, o, sp)
+
+
+def _explore_body(p: ir.Pattern, space, o: Options, sp) -> TilePlan:
     vmem_budget, align = o.vmem_budget, o.align
     max_points, measure, top_k = o.max_points, o.measure, o.top_k
     timing_db, profile = o.timing_db, o.profile
@@ -895,6 +942,10 @@ def explore(p: ir.Pattern, *,
         if hit is not None:
             if bucketing_on:
                 buckets_mod.note("exact_hits")
+            telemetry.count("dse.cache_hits")
+            hit = dataclasses.replace(hit, key=key_now())
+            sp.set(source="cache")
+            _record_plan(hit, source="cache")
             return hit
 
     if bucketing_on:
@@ -928,14 +979,20 @@ def explore(p: ir.Pattern, *,
 
             buckets_mod.schedule_retune(tag, _retune, certify=_certify,
                                         promote=_promote, policy=pol)
+            warm = dataclasses.replace(warm, key=key_now())
+            sp.set(source="warm_start", bucket=warm.bucket)
+            _record_plan(warm, source="warm_start", bucket=warm.bucket,
+                         retune_tag=tag)
             return warm
         buckets_mod.note("misses")
 
     # space already thinned above: keep the outer flag (re-thinning an
     # already-thinned space is a no-op and would report False)
-    cands, _, explored, pruned = shortlist(
-        p, vmem_budget=vmem_budget, align=align, space=space,
-        max_points=max_points, profile=profile, depths=depths)
+    with telemetry.span("dse.shortlist", thinned=thinned) as ssp:
+        cands, _, explored, pruned = shortlist(
+            p, vmem_budget=vmem_budget, align=align, space=space,
+            max_points=max_points, profile=profile, depths=depths)
+        ssp.set(explored=explored, pruned=pruned, feasible=len(cands))
     if not cands:
         raise ValueError(
             f"DSE: no tile candidate fits VMEM budget {vmem_budget} B "
@@ -944,54 +1001,80 @@ def explore(p: ir.Pattern, *,
     measured_s = 0.0
     timed_n = 0
     best = cands[0]
+    prov_measured: List[Dict] = []
+    prov_cert: List[Dict] = []
+    n_short = n_timed = 0
     if measure == "top_k":
         pol = resilience.resolve_policy(policy)
-        timings = _time_candidates(p, _top_distinct_sizes(cands,
-                                                          max(top_k, 1)),
-                                   vmem_budget=vmem_budget, align=align,
-                                   timing_db=timing_db, warmup=warmup,
-                                   repeat=repeat, policy=pol, cache=tc)
-        _observe(type(p).__name__, _workload_tag(p), timings)
-        ranked = sorted(timings,
-                        key=lambda t: (t.measurement.median_s,
-                                       t.traffic_words, t.depth,
-                                       -t.vmem_bytes))
-        for win in ranked:
-            if pol.certify:
-                sig = tuple(sorted((k, tuple(v))
-                                   for k, v in win.sizes.items()))
-                ckey = "certify|" + measure_mod.TimingDB.full_key(
-                    pattern_key(p, vmem_budget=vmem_budget, align=align,
-                                extra=("certify", sig),
-                                device="", profile_hash=""))
-                if tc is not None and tc.quarantined(ckey) is not None:
-                    continue  # failed certification in a past run
-                ok, reason = resilience.certify_guarded(
-                    lambda w=win: resilience.certify_tile_plan(
-                        p, w.sizes, vmem_budget=vmem_budget),
-                    key=ckey, policy=pol)
-                if not ok:
-                    resilience.record("certify", "certify-failed",
-                                      ckey, "quarantined", reason)
-                    if tc is not None:
-                        tc.quarantine(ckey, "certify-failed", reason)
-                    continue
-            best = Priced(win.sizes, win.traffic_words, win.vmem_bytes,
-                          win.analytic_seconds, win.calibrated_seconds,
-                          win.steps, depth=win.depth)
-            measured_s = win.measurement.median_s
-            timed_n = len(timings)
-            break
-        else:
-            # every shortlisted candidate failed timing or
-            # certification: the analytic argmin ships, uncertified
-            # measured data never does
-            resilience.record(
-                "explore", "no-measured-winner", _workload_tag(p),
-                "fallback",
-                f"{len(timings)} timed, 0 certified; analytic argmin "
-                "promoted instead")
+        with telemetry.span("dse.measure", top_k=int(top_k)) as msp:
+            top = _top_distinct_sizes(cands, max(top_k, 1))
+            n_short = len(top)
+            timings = _time_candidates(p, top, vmem_budget=vmem_budget,
+                                       align=align, timing_db=timing_db,
+                                       warmup=warmup, repeat=repeat,
+                                       policy=pol, cache=tc)
+            _observe(type(p).__name__, _workload_tag(p), timings)
+            ranked = sorted(timings,
+                            key=lambda t: (t.measurement.median_s,
+                                           t.traffic_words, t.depth,
+                                           -t.vmem_bytes))
+            prov_measured = [
+                {"sizes": {k: list(v) for k, v in t.sizes.items()},
+                 "depth": int(t.depth),
+                 "median_s": float(t.measurement.median_s),
+                 "lowering": t.lowering} for t in ranked]
+            n_timed = len(timings)
+            msp.set(shortlisted=n_short, timed=n_timed)
+            for win in ranked:
+                if pol.certify:
+                    sig = tuple(sorted((k, tuple(v))
+                                       for k, v in win.sizes.items()))
+                    ckey = "certify|" + measure_mod.TimingDB.full_key(
+                        pattern_key(p, vmem_budget=vmem_budget,
+                                    align=align, extra=("certify", sig),
+                                    device="", profile_hash=""))
+                    if tc is not None \
+                            and tc.quarantined(ckey) is not None:
+                        # failed certification in a past run
+                        prov_cert.append(
+                            {"sizes": {k: list(v)
+                                       for k, v in win.sizes.items()},
+                             "ok": False, "reason": "quarantined"})
+                        continue
+                    ok, reason = resilience.certify_guarded(
+                        lambda w=win: resilience.certify_tile_plan(
+                            p, w.sizes, vmem_budget=vmem_budget),
+                        key=ckey, policy=pol)
+                    prov_cert.append(
+                        {"sizes": {k: list(v)
+                                   for k, v in win.sizes.items()},
+                         "ok": bool(ok), "reason": reason})
+                    if not ok:
+                        resilience.record("certify", "certify-failed",
+                                          ckey, "quarantined", reason)
+                        if tc is not None:
+                            tc.quarantine(ckey, "certify-failed", reason)
+                        continue
+                best = Priced(win.sizes, win.traffic_words,
+                              win.vmem_bytes, win.analytic_seconds,
+                              win.calibrated_seconds, win.steps,
+                              depth=win.depth)
+                measured_s = win.measurement.median_s
+                timed_n = len(timings)
+                break
+            else:
+                # every shortlisted candidate failed timing or
+                # certification: the analytic argmin ships, uncertified
+                # measured data never does
+                resilience.record(
+                    "explore", "no-measured-winner", _workload_tag(p),
+                    "fallback",
+                    f"{len(timings)} timed, 0 certified; analytic "
+                    "argmin promoted instead")
 
+    # key recomputed AFTER the calibration update: the next call
+    # prices under the new profile hash and must hit this entry
+    final_key = key_now()
     plan = TilePlan(sizes={k: tuple(v) for k, v in best.sizes.items()},
                     depths={k: int(best.depth) for k in best.sizes},
                     traffic_words=best.traffic_words,
@@ -999,14 +1082,29 @@ def explore(p: ir.Pattern, *,
                     modeled_seconds=best.calibrated_seconds,
                     explored=explored, pruned=pruned, thinned=thinned,
                     measured=timed_n > 0, measured_seconds=measured_s,
-                    timed=timed_n)
+                    timed=timed_n, key=final_key)
     if tc is not None:
-        # key recomputed AFTER the calibration update: the next call
-        # prices under the new profile hash and must hit this entry
-        tc.put(key_now(), plan)
+        tc.put(final_key, plan)
         if bucketing_on:
             buckets_mod.record_tile(p, plan, tc, vmem_budget=vmem_budget,
                                     align=align)
+    sp.set(source="explored", explored=explored, pruned=pruned,
+           timed=timed_n)
+    _record_plan(
+        plan, source="explored",
+        enumerated=explored,
+        pruned={"vmem": pruned,
+                "dominated": (max(len(cands) - n_short, 0)
+                              if measure == "top_k" else 0),
+                "measure_failures": max(n_short - n_timed, 0)},
+        analytic_ranks=[
+            {"sizes": {k: list(v) for k, v in c.sizes.items()},
+             "depth": int(c.depth),
+             "traffic_words": int(c.traffic_words),
+             "calibrated_seconds": float(c.calibrated_seconds)}
+            for c in cands[:max(int(top_k), 3)]],
+        measured_ranks=prov_measured,
+        certification=prov_cert)
     return plan
 
 
@@ -1054,6 +1152,7 @@ class PipelinePlan:
     depths: Tuple[int, ...] = ()    # per-group stage-buffer depth
     warm_start: bool = False        # adapted from a tuned bucket
     bucket: str = ""                # donor bucket signature
+    key: str = ""                   # tuning-cache key (dse.explain)
 
     def __post_init__(self):
         if not self.group_blocks:
@@ -1092,6 +1191,7 @@ class PipelinePlan:
             "measured": bool(self.measured),
             "measured_seconds": float(self.measured_seconds),
             "timed": int(self.timed),
+            "key": str(self.key),
         }
 
     @classmethod
@@ -1110,6 +1210,7 @@ class PipelinePlan:
                    measured=bool(d.get("measured", False)),
                    measured_seconds=float(d.get("measured_seconds", 0.0)),
                    timed=int(d.get("timed", 0)),
+                   key=str(d.get("key", "")),
                    cached=True)
 
 
@@ -1290,6 +1391,9 @@ def _observe_pipeline(pipe, timings: List[PipelineTiming]) -> None:
         for t in timings]
     if samples:
         calibrate.observe(samples)
+    _accuracy_gauges("Pipeline", [(t.calibrated_seconds,
+                                   t.measurement.median_s)
+                                  for t in timings])
 
 
 def _price_whole_pipeline(pipe, *, vmem_budget: int, align: int,
@@ -1417,14 +1521,21 @@ def explore_pipeline(pipe, *,
     served an adapted plan immediately while a background re-tune
     promotes the certified exact-shape winner.
     """
-    from . import pipeline as plmod  # local import: keep layering thin
-
     o = _resolve_options(options, vmem_budget=vmem_budget, align=align,
                          cache=cache, max_points=max_points,
                          measure=measure, top_k=top_k,
                          timing_db=timing_db, profile=profile,
                          warmup=warmup, repeat=repeat, depths=depths,
                          policy=policy, bucketing=bucketing)
+    if o.trace:
+        telemetry.enable()
+    with telemetry.span("dse.explore_pipeline", pipeline=pipe.name) as sp:
+        return _explore_pipeline_body(pipe, o, sp)
+
+
+def _explore_pipeline_body(pipe, o: Options, sp) -> PipelinePlan:
+    from . import pipeline as plmod  # local import: keep layering thin
+
     vmem_budget, align = o.vmem_budget, o.align
     max_points, measure, top_k = o.max_points, o.measure, o.top_k
     timing_db, profile = o.timing_db, o.profile
@@ -1454,6 +1565,10 @@ def explore_pipeline(pipe, *,
         if hit is not None:
             if bucketing_on:
                 buckets_mod.note("exact_hits")
+            telemetry.count("dse.cache_hits")
+            hit = dataclasses.replace(hit, key=key_now())
+            sp.set(source="cache")
+            _record_plan(hit, source="cache")
             return hit
 
     if bucketing_on:
@@ -1488,6 +1603,10 @@ def explore_pipeline(pipe, *,
 
             buckets_mod.schedule_retune(tag, _retune, certify=_certify,
                                         promote=_promote, policy=pol)
+            warm = dataclasses.replace(warm, key=key_now())
+            sp.set(source="warm_start", bucket=warm.bucket)
+            _record_plan(warm, source="warm_start", bucket=warm.bucket,
+                         retune_tag=tag)
             return warm
         buckets_mod.note("misses")
 
@@ -1496,10 +1615,12 @@ def explore_pipeline(pipe, *,
     # the fully fused (whole-range) candidates are priced once and
     # shared: they seed the DP's (0, n) entry AND the measured
     # shortlist below (no duplicate fuse_dag/plan_memory work)
-    priced_whole = _price_whole_pipeline(
-        pipe, vmem_budget=vmem_budget, align=align,
-        max_points=max_points, profile=prof, counters=counters,
-        depths=depths)
+    with telemetry.span("dse.shortlist", pipeline=pipe.name) as ssp:
+        priced_whole = _price_whole_pipeline(
+            pipe, vmem_budget=vmem_budget, align=align,
+            max_points=max_points, profile=prof, counters=counters,
+            depths=depths)
+        ssp.set(fused_candidates=len(priced_whole))
 
     def best_group(i0: int, i1: int, memo: Dict):
         """Per-group (block, depth) choice: cheapest (words, seconds,
@@ -1572,68 +1693,212 @@ def explore_pipeline(pipe, *,
         explored=counters["explored"], pruned=counters["pruned"],
         depths=best[5])
 
+    prov_measured: List[Dict] = []
+    prov_cert: List[Dict] = []
     if measure == "top_k" and plan.fused:
         pol = resilience.resolve_policy(policy)
-        # the resolved profile (prof=None means "uncalibrated", whether
-        # from an explicit False or from no profile on disk) must not
-        # re-resolve back to the on-disk profile downstream
-        timings = measured_pipeline_shortlist(
-            pipe, top_k=top_k, vmem_budget=vmem_budget, align=align,
-            max_points=max_points,
-            profile=prof if prof is not None else False,
-            timing_db=timing_db, warmup=warmup, repeat=repeat,
-            priced=priced_whole, depths=depths, policy=pol,
-            cache=tc if tc is not None else False)
-        ranked = sorted(timings,
-                        key=lambda t: (t.measurement.median_s,
-                                       t.traffic_words, t.depth,
-                                       -t.vmem_bytes))
-        promoted = False
-        for win in ranked:
-            if pol.certify:
-                ckey = "certify|" + measure_mod.TimingDB.full_key(
-                    pipeline_key(pipe, vmem_budget=vmem_budget,
-                                 align=align,
-                                 extra=("certify", win.block, win.depth),
-                                 device="", profile_hash=""))
-                if tc is not None and tc.quarantined(ckey) is not None:
-                    continue  # failed certification in a past run
-                ok, reason = resilience.certify_guarded(
-                    lambda w=win: resilience.certify_pipeline_plan(
-                        pipe, w.plan, vmem_budget=vmem_budget),
-                    key=ckey, policy=pol)
-                if not ok:
-                    resilience.record("certify", "certify-failed",
-                                      ckey, "quarantined", reason)
-                    if tc is not None:
-                        tc.quarantine(ckey, "certify-failed", reason)
-                    continue
-            plan = dataclasses.replace(
-                win.plan,
-                unfused_traffic_words=plan.unfused_traffic_words,
-                explored=counters["explored"], pruned=counters["pruned"],
-                measured=True,
-                measured_seconds=win.measurement.median_s,
-                timed=len(timings))
-            promoted = True
-            break
-        if not promoted:
-            resilience.record(
-                "explore", "no-measured-winner",
-                f"Pipeline:{pipe.name}:{pipe.shared_extent}",
-                "fallback",
-                f"{len(timings)} timed, 0 certified; analytic plan "
-                "promoted instead")
+        with telemetry.span("dse.measure", top_k=int(top_k)) as msp:
+            # the resolved profile (prof=None means "uncalibrated",
+            # whether from an explicit False or from no profile on
+            # disk) must not re-resolve back to the on-disk profile
+            # downstream
+            timings = measured_pipeline_shortlist(
+                pipe, top_k=top_k, vmem_budget=vmem_budget, align=align,
+                max_points=max_points,
+                profile=prof if prof is not None else False,
+                timing_db=timing_db, warmup=warmup, repeat=repeat,
+                priced=priced_whole, depths=depths, policy=pol,
+                cache=tc if tc is not None else False)
+            ranked = sorted(timings,
+                            key=lambda t: (t.measurement.median_s,
+                                           t.traffic_words, t.depth,
+                                           -t.vmem_bytes))
+            prov_measured = [
+                {"block": int(t.block), "depth": int(t.depth),
+                 "median_s": float(t.measurement.median_s)}
+                for t in ranked]
+            msp.set(timed=len(timings))
+            promoted = False
+            for win in ranked:
+                if pol.certify:
+                    ckey = "certify|" + measure_mod.TimingDB.full_key(
+                        pipeline_key(pipe, vmem_budget=vmem_budget,
+                                     align=align,
+                                     extra=("certify", win.block,
+                                            win.depth),
+                                     device="", profile_hash=""))
+                    if tc is not None \
+                            and tc.quarantined(ckey) is not None:
+                        # failed certification in a past run
+                        prov_cert.append({"block": int(win.block),
+                                          "depth": int(win.depth),
+                                          "ok": False,
+                                          "reason": "quarantined"})
+                        continue
+                    ok, reason = resilience.certify_guarded(
+                        lambda w=win: resilience.certify_pipeline_plan(
+                            pipe, w.plan, vmem_budget=vmem_budget),
+                        key=ckey, policy=pol)
+                    prov_cert.append({"block": int(win.block),
+                                      "depth": int(win.depth),
+                                      "ok": bool(ok), "reason": reason})
+                    if not ok:
+                        resilience.record("certify", "certify-failed",
+                                          ckey, "quarantined", reason)
+                        if tc is not None:
+                            tc.quarantine(ckey, "certify-failed", reason)
+                        continue
+                plan = dataclasses.replace(
+                    win.plan,
+                    unfused_traffic_words=plan.unfused_traffic_words,
+                    explored=counters["explored"],
+                    pruned=counters["pruned"],
+                    measured=True,
+                    measured_seconds=win.measurement.median_s,
+                    timed=len(timings))
+                promoted = True
+                break
+            if not promoted:
+                resilience.record(
+                    "explore", "no-measured-winner",
+                    f"Pipeline:{pipe.name}:{pipe.shared_extent}",
+                    "fallback",
+                    f"{len(timings)} timed, 0 certified; analytic plan "
+                    "promoted instead")
 
+    # key recomputed AFTER any calibration update: the next call
+    # prices under the new profile hash and must hit this entry
+    final_key = key_now()
+    plan = dataclasses.replace(plan, key=final_key)
     if tc is not None:
-        # key recomputed AFTER any calibration update: the next call
-        # prices under the new profile hash and must hit this entry
-        tc.put(key_now(), plan)
+        tc.put(final_key, plan)
         if bucketing_on:
             buckets_mod.record_pipeline(pipe, plan, tc,
                                         vmem_budget=vmem_budget,
                                         align=align)
+    sp.set(source="explored", explored=plan.explored,
+           pruned=plan.pruned, groups=len(plan.groups),
+           timed=plan.timed)
+    _record_plan(
+        plan, source="explored",
+        enumerated=plan.explored,
+        pruned={"vmem": plan.pruned,
+                "dominated": max(len(priced_whole) - plan.timed, 0)
+                if plan.timed else 0},
+        analytic_ranks=[
+            {"block": int(b), "depth": int(d),
+             "traffic_words": int(words),
+             "calibrated_seconds": float(s_cal)}
+            for (b, d), (words, _v, _sa, s_cal, _st)
+            in priced_whole[:max(int(top_k), 3)]],
+        measured_ranks=prov_measured,
+        certification=prov_cert)
     return plan
+
+
+# --------------------------------------------------------------------------
+# Plan provenance: dse.explain
+# --------------------------------------------------------------------------
+
+
+def explain_dict(plan) -> Dict:
+    """Machine-readable provenance report for a ``TilePlan`` /
+    ``PipelinePlan``: where the winner came from (fresh exploration,
+    tuning-cache hit, bucket warm start), what was enumerated and why
+    candidates were rejected, the analytic and measured rankings and
+    the certification outcomes.
+
+    The deep exploration internals (rank tables, certification
+    outcomes, per-reason pruning counts) are captured only while
+    tracing is enabled (``REPRO_TRACE=1`` / ``Options(trace=True)``)
+    and the plan was explored in this process; otherwise the report
+    falls back to the accounting every plan carries on itself
+    (explored/pruned totals, measured seconds, warm-start donor).
+    """
+    source = ("warm_start" if plan.warm_start
+              else "cache" if plan.cached else "explored")
+    d: Dict = {
+        "kind": type(plan).__name__,
+        "key": plan.key,
+        "source": source,
+        "explored": int(plan.explored),
+        "pruned": int(plan.pruned),
+        "traffic_words": int(plan.traffic_words),
+        "vmem_bytes": int(plan.vmem_bytes),
+        "modeled_seconds": float(plan.modeled_seconds),
+        "measured": bool(plan.measured),
+        "measured_seconds": float(plan.measured_seconds),
+        "timed": int(plan.timed),
+        "warm_start": bool(plan.warm_start),
+        "bucket": plan.bucket,
+        "cached": bool(plan.cached),
+    }
+    if isinstance(plan, PipelinePlan):
+        d["block"] = int(plan.block)
+        d["groups"] = [list(g) for g in plan.groups]
+        d["depths"] = [int(x) for x in plan.depths]
+    else:
+        d["sizes"] = {k: list(v) for k, v in plan.sizes.items()}
+        d["depths"] = {k: int(v) for k, v in plan.depths.items()}
+        d["thinned"] = bool(plan.thinned)
+    rec = telemetry.get_record("plan", plan.key) if plan.key else None
+    if rec is not None:
+        d["provenance"] = rec
+        # the plan object's own warm_start flag is authoritative: the
+        # background re-tune records its exploration under the same
+        # key, but THIS plan is still the warm loan it was served as
+        d["source"] = ("warm_start" if plan.warm_start
+                       else rec.get("source", source))
+    return d
+
+
+def explain(plan) -> str:
+    """Human-readable plan-provenance report (``explain_dict`` as
+    text): winner source, tile/group choice, analytic vs measured
+    ranks, per-reason pruning counts, certification outcomes."""
+    d = explain_dict(plan)
+    lines = [f"{d['kind']} {d['key'] or '<no key>'}",
+             f"  source: {d['source']}"
+             + (f" (bucket {d['bucket']})" if d["bucket"] else "")]
+    if "sizes" in d:
+        lines.append("  sizes: " + ", ".join(
+            f"{k}={tuple(v)}" for k, v in sorted(d["sizes"].items())))
+    else:
+        lines.append(f"  block: {d['block']}  groups: {d['groups']}")
+    lines.append(f"  depths: {d['depths']}")
+    lines.append(f"  traffic: {d['traffic_words']} words   "
+                 f"vmem: {d['vmem_bytes']} B   "
+                 f"modeled: {d['modeled_seconds']:.3e} s")
+    if d["measured"]:
+        lines.append(f"  measured: {d['measured_seconds']:.3e} s "
+                     f"({d['timed']} candidates timed)")
+    lines.append(f"  enumerated: {d['explored']}  pruned: {d['pruned']}")
+    rec = d.get("provenance")
+    if rec:
+        pr = rec.get("pruned")
+        if isinstance(pr, dict):
+            lines.append("  pruned by reason: " + ", ".join(
+                f"{k}={v}" for k, v in sorted(pr.items())))
+        for label, keyname in (("analytic ranks", "analytic_ranks"),
+                               ("measured ranks", "measured_ranks")):
+            rows = rec.get(keyname)
+            if rows:
+                lines.append(f"  {label}:")
+                lines.extend(
+                    f"    {i + 1}. " + ", ".join(f"{k}={v}"
+                                                 for k, v in r.items())
+                    for i, r in enumerate(rows))
+        for c in rec.get("certification") or ():
+            ident = ", ".join(f"{k}={v}" for k, v in c.items()
+                              if k not in ("ok", "reason"))
+            verdict = ("certified" if c.get("ok")
+                       else f"FAILED ({c.get('reason', '')})")
+            lines.append(f"  certify {ident}: {verdict}")
+    else:
+        lines.append("  (no in-process trace record; run with "
+                     "REPRO_TRACE=1 for rank tables and pruning "
+                     "reasons)")
+    return "\n".join(lines)
 
 
 # --------------------------------------------------------------------------
@@ -2029,5 +2294,6 @@ def select_paged_decode_blocks(
         cached=pplan.cached, measured=pplan.measured,
         measured_seconds=pplan.measured_seconds, timed=timed,
         depths={"pd_kv": int(pplan.depth)},
-        warm_start=pplan.warm_start, bucket=pplan.bucket)
+        warm_start=pplan.warm_start, bucket=pplan.bucket,
+        key=pplan.key)
     return (layout, int(ps), int(pplan.block), int(pplan.depth)), summary

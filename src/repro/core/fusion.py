@@ -199,6 +199,17 @@ def fuse_dag_stages(stages: Sequence[ir.Pattern],
     on each terminal afterwards to materialize the external tensor
     tiles.
     """
+    from . import telemetry
+
+    with telemetry.span("fusion.fuse_dag", stages=len(stages),
+                        terminals=len(terminal_names),
+                        block=int(block)):
+        return _fuse_dag_body(stages, terminal_names, block)
+
+
+def _fuse_dag_body(stages: Sequence[ir.Pattern],
+                   terminal_names: Sequence[str],
+                   block: int) -> Dict[str, ir.Pattern]:
     from .strip_mine import strip_mine  # local import: avoid cycle
 
     names = {s.name for s in stages}

@@ -32,7 +32,7 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import ir, resilience
+from . import ir, resilience, telemetry
 
 
 # --------------------------------------------------------------------------
@@ -120,18 +120,23 @@ def measure(fn: Callable[[], object], *, warmup: int = 1,
     # chaos hook: REPRO_FAULTS=time:<p> makes this measurement fail
     # deterministically so the quarantine path can be exercised
     resilience.inject("time", "measure.measure")
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    times = []
-    for _ in range(repeat):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        times.append(time.perf_counter() - t0)
-    return Measurement(median_s=statistics.median(times),
-                       mean_s=sum(times) / len(times),
-                       min_s=min(times), max_s=max(times),
-                       repeat=repeat, warmup=warmup,
-                       device=device_kind(), interpret=interpret_mode())
+    with telemetry.span("measure.measure", warmup=warmup,
+                        repeat=repeat) as sp:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+        times = []
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times.append(time.perf_counter() - t0)
+        m = Measurement(median_s=statistics.median(times),
+                        mean_s=sum(times) / len(times),
+                        min_s=min(times), max_s=max(times),
+                        repeat=repeat, warmup=warmup,
+                        device=device_kind(),
+                        interpret=interpret_mode())
+        sp.set(median_s=m.median_s, spread=m.spread)
+    return m
 
 
 # --------------------------------------------------------------------------
@@ -253,8 +258,11 @@ def timed(key: str, make_fn: Callable[[], Callable[[], object]], *,
     if tdb is not None:
         hit = tdb.get(key)
         if hit is not None:
+            telemetry.count("measure.db_hits")
             return hit
-    m = measure(make_fn(), warmup=warmup, repeat=repeat)
+    with telemetry.span("measure.timed", key=key[-32:]) as sp:
+        m = measure(make_fn(), warmup=warmup, repeat=repeat)
+        sp.set(median_s=m.median_s)
     if tdb is not None:
         tdb.put(key, m)
     return m

@@ -89,6 +89,7 @@ _DEFAULTS: dict = {
     "depths": DEPTHS,
     "policy": None,         # None -> resilience.default_policy()
     "bucketing": False,     # shape-bucketed warm-start mode (buckets.py)
+    "trace": False,         # telemetry tracing spans (telemetry.py)
 }
 
 _POLICY_VARS = ("REPRO_TIMEOUT_S", "REPRO_RETRIES", "REPRO_BACKOFF_S",
@@ -111,8 +112,9 @@ class Options:
     ``"top_k"``), ``top_k``, ``timing_db`` (None / False / path /
     TimingDB), ``profile`` (None persisted / False uncalibrated /
     object), ``warmup``, ``repeat``, ``depths``,
-    ``policy`` (resilience.Policy), plus the new ``bucketing`` flag
-    enabling shape-bucketed warm starts (``core.buckets``).
+    ``policy`` (resilience.Policy), plus the ``bucketing`` flag
+    enabling shape-bucketed warm starts (``core.buckets``) and the
+    ``trace`` flag enabling telemetry spans (``core.telemetry``).
     """
 
     vmem_budget: Any = UNSET
@@ -128,6 +130,7 @@ class Options:
     depths: Any = UNSET
     policy: Any = UNSET
     bucketing: Any = UNSET
+    trace: Any = UNSET
 
     @classmethod
     def from_env(cls) -> "Options":
@@ -142,6 +145,7 @@ class Options:
         ``REPRO_BACKOFF_S``   } ``resilience.default_policy`` when any
         ``REPRO_CERTIFY``    /  of the four is set)
         ``REPRO_BUCKETING``  ``bucketing`` (1/true/on/yes enables)
+        ``REPRO_TRACE``      ``trace`` (1/true/on/yes enables spans)
         ===================  ============================================
 
         Two further families are consumed downstream of the options
@@ -167,6 +171,9 @@ class Options:
         b = os.environ.get("REPRO_BUCKETING")
         if b is not None:
             kw["bucketing"] = b.strip().lower() in _TRUTHY
+        tr = os.environ.get("REPRO_TRACE")
+        if tr is not None:
+            kw["trace"] = tr.strip().lower() in _TRUTHY
         return cls(**kw)
 
     @staticmethod
@@ -198,4 +205,5 @@ class Options:
                              f"supported: None, 'top_k'")
         kw["depths"] = tuple(int(d) for d in kw["depths"])
         kw["bucketing"] = bool(kw["bucketing"])
+        kw["trace"] = bool(kw["trace"])
         return Options(**kw)

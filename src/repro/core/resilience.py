@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import itertools
 import json
 import logging
 import os
@@ -66,6 +67,8 @@ import threading
 import time
 import warnings
 from typing import Callable, Dict, List, Optional, Tuple
+
+from . import telemetry
 
 logger = logging.getLogger("repro.resilience")
 
@@ -174,16 +177,27 @@ class EventLog:
     ``benchmarks/run.py`` emits into the BENCH json and the CI chaos
     smoke asserts are nonzero under injected faults.  Thread-safe (the
     deadline worker threads record through it).
+
+    Storage-wise this is a facade over the single structured event
+    stream in ``core.telemetry`` (each ``EventLog`` instance owns a
+    stream name; the process-wide ``LOG`` uses ``"resilience"``), so
+    degradation events land in the same export as spans and the
+    recovery log -- the public ``record`` / ``events`` / ``counts`` /
+    ``reset`` API is unchanged.
     """
 
+    _ids = itertools.count()
+
     def __init__(self):
-        self._events: List[FailureEvent] = []
+        i = next(EventLog._ids)
+        self.stream = "resilience" if i == 0 else f"resilience.{i}"
         self._once: set = set()
         self._lock = threading.Lock()
 
     def record(self, event: FailureEvent) -> None:
-        with self._lock:
-            self._events.append(event)
+        telemetry.emit(self.stream, event.kind, stage=event.stage,
+                       key=event.key, action=event.action,
+                       detail=event.detail)
         logger.warning("resilience[%s/%s] %s: %s (%s)", event.stage,
                        event.kind, event.action, event.key, event.detail)
 
@@ -201,8 +215,11 @@ class EventLog:
 
     def events(self, *, stage: Optional[str] = None,
                action: Optional[str] = None) -> List[FailureEvent]:
-        with self._lock:
-            evs = list(self._events)
+        evs = [FailureEvent(stage=e.get("stage", ""), kind=e["kind"],
+                            key=e.get("key", ""),
+                            action=e.get("action", ""),
+                            detail=e.get("detail", ""))
+               for e in telemetry.events(self.stream)]
         if stage is not None:
             evs = [e for e in evs if e.stage == stage]
         if action is not None:
@@ -216,8 +233,8 @@ class EventLog:
         return out
 
     def reset(self) -> None:
+        telemetry.clear_events(self.stream)
         with self._lock:
-            self._events.clear()
             self._once.clear()
 
 
@@ -672,20 +689,24 @@ def certify_tile_plan(p, sizes: Dict[str, Tuple[int, ...]], *,
     from .codegen_pallas import lower_for_timing
     from .measure import synth_inputs
 
-    inject("certify", type(p).__name__)
-    fn, how = lower_for_timing(p, sizes, vmem_budget=vmem_budget,
-                               seed=seed)
-    if how == "oracle":
-        return True, "oracle lowering is the reference"
-    inputs = synth_inputs(ir.inputs_of(p), seed=seed)
-    want = jax.jit(lambda **kw: execute(p, kw))(**inputs)
-    got = fn()
-    if isinstance(want, tuple):
-        want = want[0]
-    if isinstance(got, tuple):
-        got = got[0]
-    ok, why = _outputs_match(got, want)
-    return ok, f"pallas-vs-oracle: {why}"
+    with telemetry.span("resilience.certify", kind="tile",
+                        key=p.name) as sp:
+        inject("certify", type(p).__name__)
+        fn, how = lower_for_timing(p, sizes, vmem_budget=vmem_budget,
+                                   seed=seed)
+        if how == "oracle":
+            sp.set(ok=True, how="oracle")
+            return True, "oracle lowering is the reference"
+        inputs = synth_inputs(ir.inputs_of(p), seed=seed)
+        want = jax.jit(lambda **kw: execute(p, kw))(**inputs)
+        got = fn()
+        if isinstance(want, tuple):
+            want = want[0]
+        if isinstance(got, tuple):
+            got = got[0]
+        ok, why = _outputs_match(got, want)
+        sp.set(ok=ok, how="pallas")
+        return ok, f"pallas-vs-oracle: {why}"
 
 
 def certify_pipeline_plan(pipe, plan, *,
@@ -698,24 +719,29 @@ def certify_pipeline_plan(pipe, plan, *,
     from .codegen_pallas import lower_pipeline_for_timing
     from .measure import synth_inputs
 
-    inject("certify", pipe.name)
-    inputs = synth_inputs(plmod.external_inputs(pipe), seed=seed)
-    got = lower_pipeline_for_timing(pipe, plan,
-                                    vmem_budget=vmem_budget,
-                                    seed=seed)()
-    want = plmod.run_unfused(pipe, dict(inputs))
-    outs = plmod.output_names(pipe)
-    if not isinstance(want, dict):
-        want = {outs[0]: want}
-    if not isinstance(got, dict):
-        got = {outs[0]: got}
-    for name, ref in want.items():
-        if name not in got:
-            return False, f"output {name!r} missing from fused result"
-        ok, why = _outputs_match(got[name], ref)
-        if not ok:
-            return False, f"output {name!r}: {why}"
-    return True, "fused-vs-unfused: ok"
+    with telemetry.span("resilience.certify", kind="pipeline",
+                        key=pipe.name) as sp:
+        inject("certify", pipe.name)
+        inputs = synth_inputs(plmod.external_inputs(pipe), seed=seed)
+        got = lower_pipeline_for_timing(pipe, plan,
+                                        vmem_budget=vmem_budget,
+                                        seed=seed)()
+        want = plmod.run_unfused(pipe, dict(inputs))
+        outs = plmod.output_names(pipe)
+        if not isinstance(want, dict):
+            want = {outs[0]: want}
+        if not isinstance(got, dict):
+            got = {outs[0]: got}
+        for name, ref in want.items():
+            if name not in got:
+                sp.set(ok=False)
+                return False, f"output {name!r} missing from fused result"
+            ok, why = _outputs_match(got[name], ref)
+            if not ok:
+                sp.set(ok=False)
+                return False, f"output {name!r}: {why}"
+        sp.set(ok=True)
+        return True, "fused-vs-unfused: ok"
 
 
 def certify_guarded(certify_fn: Callable[[], Tuple[bool, str]], *,

@@ -55,7 +55,7 @@ def resolve_plan(kind: str, *shape: int, measure: Optional[str] = None,
     re-tune promotes the exact-shape winner, the next resolve picks it
     up from the cache.
     """
-    from repro.core import dse
+    from repro.core import dse, telemetry
 
     if kind not in _SELECTORS:
         raise ValueError(f"unknown plan kind {kind!r}; "
@@ -68,10 +68,14 @@ def resolve_plan(kind: str, *shape: int, measure: Optional[str] = None,
         key = None         # the tuple itself bound fine; only .get raised
         hit = None
     if hit is not None:
+        telemetry.count("ops.memo_hits")
         return hit
-    result = getattr(dse, _SELECTORS[kind])(*shape, measure=measure,
-                                            policy=policy,
-                                            options=options)
+    with telemetry.span("ops.resolve_plan", kind=kind,
+                        shape=list(shape)) as sp:
+        result = getattr(dse, _SELECTORS[kind])(*shape, measure=measure,
+                                                policy=policy,
+                                                options=options)
+        sp.set(warm_start=bool(getattr(result[1], "warm_start", False)))
     if key is not None and not getattr(result[1], "warm_start", False):
         _PLAN_MEMO[key] = result
     return result

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, get_config
+from repro.core import telemetry
 from repro.launch import steps as steps_mod
 from repro.models import model
 
@@ -78,6 +79,10 @@ def _resolve_group_plans(cfg, lengths: Sequence[int], gen: int
 
     opts = Options(bucketing=True)
     head_dim = cfg.head_dim or (cfg.d_model // max(cfg.n_heads, 1))
+    # snapshot at entry: the process-wide bucket counters accumulate
+    # across serve invocations, so per-call hit rates come from the
+    # delta, not the raw totals
+    before = buckets.snapshot()
     rows = []
     for plen in lengths:
         t0 = time.time()
@@ -92,8 +97,9 @@ def _resolve_group_plans(cfg, lengths: Sequence[int], gen: int
             "cached": bool(plan.cached),
             "sizes": {k: tuple(v) for k, v in plan.sizes.items()},
         })
-    rows.append({"bucket_stats": buckets.stats(),
-                 "bucket_hit_rate": buckets.hit_rate()})
+    d = buckets.delta(before)
+    rows.append({"bucket_stats": d,
+                 "bucket_hit_rate": buckets.delta_hit_rate(d)})
     return rows
 
 
@@ -142,9 +148,12 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int,
         ring = _ring_len(cfg, ln + gen)
 
         t0 = time.time()
-        nxt, cache = _prefill(prefill_fn, params, cache, prompt, ring)
-        jax.block_until_ready(nxt)
-        prefill_s += time.time() - t0
+        with telemetry.span("serve.prefill", prompt_len=ln, batch=gb):
+            nxt, cache = _prefill(prefill_fn, params, cache, prompt, ring)
+            jax.block_until_ready(nxt)
+        dt = time.time() - t0
+        prefill_s += dt
+        telemetry.observe("serve.prefill_s", dt)
 
         group_out = []
         t0 = time.time()
@@ -153,8 +162,11 @@ def serve(arch: str, smoke: bool, batch: int, prompt_len: int,
                 tok = nxt.reshape(gb, 1, cfg.n_codebooks)
             else:
                 tok = nxt.reshape(gb, 1)
-            nxt, cache = step_fn(params, cache, tok, jnp.int32(i))
-            group_out.append(np.asarray(nxt))
+            ts = time.time()
+            with telemetry.span("serve.decode_step", index=i, batch=gb):
+                nxt, cache = step_fn(params, cache, tok, jnp.int32(i))
+                group_out.append(np.asarray(nxt))
+            telemetry.observe("serve.decode_token_s", time.time() - ts)
         decode_s += time.time() - t0
 
         toks = np.stack(group_out, axis=1)        # (gb, gen[, ncb])
@@ -340,15 +352,21 @@ def serve_continuous(arch: str, smoke: bool, slots: int, gen: int,
             queue.popleft()
             pages = [free_pages.pop() for _ in range(need)]
             t0 = time.time()
-            dcache = model.init_cache(cfg, 1, ln)
-            prompt = jnp.asarray(prompt_pool[r:r + 1, :ln], jnp.int32)
-            first, dcache = _prefill(prefill_fn, params, dcache, prompt,
-                                     _ring_len(cfg, ln))
-            cache = cache.assign_pages(s, pages, ln)
-            cache = cache.write_tokens(s, dcache["k"][:, 0, :, :ln],
-                                       dcache["v"][:, 0, :, :ln], 0)
-            jax.block_until_ready(cache.buffers)
-            prefill_s += time.time() - t0
+            with telemetry.span("serve.admit", request=r, slot=s,
+                                prompt_len=ln, pages=need):
+                dcache = model.init_cache(cfg, 1, ln)
+                prompt = jnp.asarray(prompt_pool[r:r + 1, :ln],
+                                     jnp.int32)
+                first, dcache = _prefill(prefill_fn, params, dcache,
+                                         prompt, _ring_len(cfg, ln))
+                cache = cache.assign_pages(s, pages, ln)
+                cache = cache.write_tokens(s, dcache["k"][:, 0, :, :ln],
+                                           dcache["v"][:, 0, :, :ln], 0)
+                jax.block_until_ready(cache.buffers)
+            dt = time.time() - t0
+            prefill_s += dt
+            telemetry.observe("serve.admit_s", dt)
+            telemetry.observe("serve.prefill_s", dt)
             slot_req[s], slot_pages[s], slot_done[s] = r, pages, 0
             next_tok[s] = int(np.asarray(first)[0])
             admitted += 1
@@ -363,10 +381,15 @@ def serve_continuous(arch: str, smoke: bool, slots: int, gen: int,
         paged_words += cfg.n_layers * cost_mod.paged_decode_traffic_words(
             live, page_size, hkv, head_dim)
         t0 = time.time()
-        nxt, cache = step_fn(params, cache,
-                             jnp.asarray(next_tok.reshape(slots, 1)))
-        nxt = np.asarray(nxt)
-        decode_s += time.time() - t0
+        with telemetry.span("serve.decode_step", step=steps,
+                            active=len(active)):
+            nxt, cache = step_fn(params, cache,
+                                 jnp.asarray(next_tok.reshape(slots, 1)))
+            nxt = np.asarray(nxt)
+        dt = time.time() - t0
+        decode_s += dt
+        telemetry.observe("serve.decode_token_s",
+                          dt / max(len(active), 1))
         steps += 1
         active_steps += len(active)
 
@@ -384,9 +407,12 @@ def serve_continuous(arch: str, smoke: bool, slots: int, gen: int,
             next_tok[s] = nxt[s]
             slot_done[s] += 1
             if slot_done[s] == gen:                          # evict
-                free_pages.extend(slot_pages[s])
-                cache = cache.assign_pages(s, [0] * npm, 0)
-                slot_req[s], slot_pages[s] = None, []
+                te = time.time()
+                with telemetry.span("serve.evict", request=r, slot=s):
+                    free_pages.extend(slot_pages[s])
+                    cache = cache.assign_pages(s, [0] * npm, 0)
+                    slot_req[s], slot_pages[s] = None, []
+                telemetry.observe("serve.evict_s", time.time() - te)
                 evicted += 1
 
     occupancy = active_steps / max(steps * slots, 1)

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.shapes import ShapeConfig
+from repro.core import telemetry
 from repro.models import model
 from repro.models.config import ModelConfig
 from repro.optim import adamw
@@ -68,7 +69,14 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
     the fp32 accumulators carried through the microbatch loop: without
     it GSPMD keeps them only TP-sharded (58 GB of stacked f32 grads for
     qwen2-72b -- the §Perf iteration log has the story)."""
+    with telemetry.span("steps.build.train", family=cfg.family,
+                        microbatches=microbatches):
+        return _make_train_step_body(cfg, opt_cfg, microbatches,
+                                     grad_shardings)
 
+
+def _make_train_step_body(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                          microbatches: int, grad_shardings):
     def _pin(tree):
         if grad_shardings is None:
             return tree
@@ -115,25 +123,28 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
 
 
 def make_prefill_step(cfg: ModelConfig):
-    def prefill_step(params, batch):
-        logits = model.forward(params, cfg, batch)
-        # serving prefill hands off to decode: only the last position's
-        # logits leave the step (full logits never hit HBM as output)
-        return logits[:, -1]
+    with telemetry.span("steps.build.prefill", family=cfg.family):
+        def prefill_step(params, batch):
+            logits = model.forward(params, cfg, batch)
+            # serving prefill hands off to decode: only the last
+            # position's logits leave the step (full logits never hit
+            # HBM as output)
+            return logits[:, -1]
 
-    return prefill_step
+        return prefill_step
 
 
 def make_serve_step(cfg: ModelConfig):
-    def serve_step(params, cache, tokens, index):
-        logits, new_cache = model.decode_step(params, cfg, cache,
-                                              tokens, index)
-        logits = model.mask_vocab_pad(logits, cfg)
-        # greedy next token (sampling lives in the server loop)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        return nxt, new_cache
+    with telemetry.span("steps.build.serve", family=cfg.family):
+        def serve_step(params, cache, tokens, index):
+            logits, new_cache = model.decode_step(params, cfg, cache,
+                                                  tokens, index)
+            logits = model.mask_vocab_pad(logits, cfg)
+            # greedy next token (sampling lives in the server loop)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, new_cache
 
-    return serve_step
+        return serve_step
 
 
 def make_cache_prefill_step(cfg: ModelConfig):
@@ -149,6 +160,11 @@ def make_cache_prefill_step(cfg: ModelConfig):
     block must not wrap the KV ring buffer; callers chunk long prompts
     at the ring boundary (``launch.serve`` does).
     """
+    with telemetry.span("steps.build.cache_prefill", family=cfg.family):
+        return _make_cache_prefill_body(cfg)
+
+
+def _make_cache_prefill_body(cfg: ModelConfig):
     block = cfg.family in ("dense", "moe", "audio", "vlm")
 
     def _greedy(logits):

@@ -22,8 +22,11 @@ Recovery path exercised by tests/test_runtime.py:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Dict, List, Optional, Sequence
+
+from ..core import telemetry
 
 
 @dataclasses.dataclass
@@ -98,7 +101,8 @@ class StragglerPolicy:
         self.slow: Dict[str, int] = {}
 
     def record_step(self, durations: Dict[str, float]) -> List[str]:
-        """Feed one step's per-rank durations; returns ranks to evict."""
+        """Feed one step's per-rank durations; returns ranks to evict.
+        Evictions are emitted on the unified telemetry event stream."""
         for rank, d in durations.items():
             prev = self.ewma.get(rank, d)
             self.ewma[rank] = (1 - self.alpha) * prev + self.alpha * d
@@ -111,14 +115,32 @@ class StragglerPolicy:
                     evict.append(rank)
             else:
                 self.slow[rank] = 0
+        for rank in evict:
+            telemetry.emit("recovery", "straggler-evict", rank=rank,
+                           ewma_s=self.ewma[rank], median_s=med)
         return evict
 
 
-@dataclasses.dataclass
 class RecoveryLog:
-    """Audit trail of fault events (what a coordinator would emit)."""
+    """Audit trail of fault events (what a coordinator would emit).
 
-    events: List[Dict] = dataclasses.field(default_factory=list)
+    A facade over the single structured event stream in
+    ``core.telemetry`` (stream ``"recovery"``): ``record`` emits there
+    and ``events`` reads back, so recovery events, resilience
+    degradation events and tracing spans all land in one export.  The
+    ``record(kind, **info)`` / ``events`` surface is unchanged.
+    """
+
+    _ids = itertools.count()
+
+    def __init__(self):
+        self._id = next(RecoveryLog._ids)
 
     def record(self, kind: str, **info):
-        self.events.append({"kind": kind, "t": time.time(), **info})
+        telemetry.emit("recovery", kind, log_id=self._id, **info)
+
+    @property
+    def events(self) -> List[Dict]:
+        return [{k: v for k, v in e.items()
+                 if k not in ("stream", "ts", "log_id")}
+                for e in telemetry.events("recovery", log_id=self._id)]

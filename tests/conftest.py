@@ -18,8 +18,12 @@ def _isolated_dse_cache(tmp_path, monkeypatch):
     for var in ("REPRO_FAULTS", "REPRO_FAULTS_SEED", "REPRO_TIMEOUT_S",
                 "REPRO_RETRIES", "REPRO_BACKOFF_S", "REPRO_CERTIFY"):
         monkeypatch.delenv(var, raising=False)
-    from repro.core import buckets, resilience
+    # tracing off by default, and the process-wide telemetry registry
+    # (spans, counters, event streams) starts empty for every test
+    monkeypatch.delenv("REPRO_TRACE", raising=False)
+    from repro.core import buckets, resilience, telemetry
     from repro.kernels import ops
+    telemetry.reset()
     resilience.LOG.reset()
     buckets.reset_stats()
     # the plan memo keys on shape only, not the per-test cache path --
